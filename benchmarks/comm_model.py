@@ -1,0 +1,153 @@
+"""Analytic communication/pipeline model used by the paper-figure
+benchmarks (Figs. 2, 4, 5, 6).
+
+This container has one CPU device, so cluster wall-times cannot be
+measured; instead we do what the roofline brief prescribes for collectives:
+an alpha-beta cost model parameterized by measured per-worker compute time
+(really timed on this CPU) plus hardware constants.  Two calibrations ship:
+
+  * ``paper``  — the paper's cluster (K80 GPUs, EDR InfiniBand, 4 GPUs +
+    1 communicator CPU per node, ResNet-50 = 102.5 MB of fp32 gradients).
+  * ``tpu_v5e`` — the production target (ICI intra-pod, DCI inter-pod),
+    with compute time taken from the dry-run roofline terms.
+
+The pipeline timing equations implement the paper's schedules:
+
+  CSGD  (Alg. 2):  t_step = t_io + t_compute + t_allreduce(all workers)
+  LSGD  (Alg. 3):  t_step = t_compute + t_reduce(group) + t_bcast(group)
+                          + max(t_io, t_allreduce(communicators))
+The difference is exactly which terms overlap (paper §4.1: the global
+all-reduce hides under data loading; I/O of the *next* batch is prefetched
+during compute for both algorithms' workers — the paper's Fig. 2 baseline
+keeps I/O on the critical path only insofar as it exceeds prefetch slack,
+so we expose it as an explicit parameter).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List
+
+
+@dataclass(frozen=True)
+class ClusterModel:
+    name: str
+    grad_bytes: float            # gradient payload per worker
+    bw_intra: float              # bytes/s within a group (NVLink/PCIe, ICI)
+    bw_inter: float              # bytes/s between groups (IB / DCI)
+    lat_intra: float = 5e-6      # per-hop latency (s)
+    lat_inter: float = 5e-6
+    group_size: int = 4          # workers per group (paper: 4 GPUs/node)
+    t_compute: float = 0.25      # per-step compute time per worker (s)
+    t_io: float = 0.08           # per-step data-loading time (s)
+
+
+PAPER_CLUSTER = ClusterModel(
+    name="paper",
+    grad_bytes=25_557_032 * 4,        # ResNet-50 fp32
+    bw_intra=8e9,                     # PCIe gen3-ish K80 node fabric
+    bw_inter=12.5e9,                  # EDR InfiniBand 100 Gb/s
+    # per-hop latency models the *software* per-message overhead of the
+    # paper's CUDA-aware OpenMPI 3.0 at 256-320 ranks (progress threads,
+    # stragglers), which dominates the wire beta term at this scale —
+    # calibrated so CSGD lands at the paper's 63.8% efficiency @256 and
+    # LSGD at ~93% (Fig. 6)
+    lat_intra=1.0e-4, lat_inter=1.1e-3,
+    group_size=4,
+    t_compute=0.62,                   # K80 ResNet-50 batch-64 fwd+bwd
+    t_io=0.12)                        # host->GPU image staging per batch
+
+
+def tpu_v5e_cluster(grad_bytes: float, t_compute: float,
+                    t_io: float = 0.01, group_size: int = 256
+                    ) -> ClusterModel:
+    return ClusterModel(
+        name="tpu_v5e", grad_bytes=grad_bytes,
+        bw_intra=50e9, bw_inter=6.25e9,
+        lat_intra=1e-6, lat_inter=10e-6,
+        group_size=group_size, t_compute=t_compute, t_io=t_io)
+
+
+def t_ring_allreduce(n: int, payload: float, bw: float, lat: float) -> float:
+    """Ring all-reduce: 2(n-1) hops, each carrying payload/n."""
+    if n <= 1:
+        return 0.0
+    return 2 * (n - 1) * (payload / n / bw + lat)
+
+
+def t_reduce_bcast(n: int, payload: float, bw: float, lat: float) -> float:
+    """Tree reduce (or bcast) to/from the communicator within a group."""
+    if n <= 1:
+        return 0.0
+    import math
+    hops = math.ceil(math.log2(n))
+    return hops * (payload / bw + lat)
+
+
+def csgd_step_time(c: ClusterModel, n_workers: int) -> Dict[str, float]:
+    """Paper Alg. 2: t_step = t_io + t_compute + t_allreduce(all workers).
+
+    Host->device staging (t_io) sits on the critical path — the paper's
+    K80 workers cannot overlap it with compute (§4.1), and CSGD has
+    nothing else to hide it under.  The flat all-reduce ring spans
+    groups, so inter-group links bound it once n > group_size."""
+    bw = c.bw_intra if n_workers <= c.group_size else c.bw_inter
+    lat = c.lat_intra if n_workers <= c.group_size else c.lat_inter
+    t_ar = t_ring_allreduce(n_workers, c.grad_bytes, bw, lat)
+    t_step = c.t_io + c.t_compute + t_ar
+    return {"t_step": t_step, "t_allreduce": t_ar, "t_compute": c.t_compute}
+
+
+def lsgd_step_time(c: ClusterModel, n_workers: int) -> Dict[str, float]:
+    """Paper Alg. 3: t_step = t_compute + t_local(reduce+bcast)
+    + max(t_io, t_global): the inter-group all-reduce runs on the
+    communicator CPUs *while* the workers stage the next minibatch."""
+    g = min(c.group_size, n_workers)
+    n_groups = max(n_workers // g, 1)
+    t_local = (t_reduce_bcast(g, c.grad_bytes, c.bw_intra, c.lat_intra)
+               + t_reduce_bcast(g, c.grad_bytes, c.bw_intra, c.lat_intra))
+    t_global = t_ring_allreduce(n_groups, c.grad_bytes, c.bw_inter,
+                                c.lat_inter)
+    hidden = max(c.t_io, t_global)          # the paper's overlap
+    t_step = c.t_compute + t_local + hidden
+    return {"t_step": t_step, "t_allreduce_global": t_global,
+            "t_local": t_local, "t_compute": c.t_compute,
+            "overlap_effective": t_global <= c.t_io}
+
+
+def sweep(c: ClusterModel, worker_counts: List[int], local_batch: int = 64
+          ) -> List[Dict[str, float]]:
+    rows = []
+    for n in worker_counts:
+        cs = csgd_step_time(c, n)
+        ls = lsgd_step_time(c, n)
+        rows.append({
+            "workers": n,
+            "csgd_step_s": cs["t_step"],
+            "lsgd_step_s": ls["t_step"],
+            "csgd_allreduce_s": cs["t_allreduce"],
+            "lsgd_global_allreduce_s": ls["t_allreduce_global"],
+            "csgd_ratio_comm": cs["t_allreduce"] / cs["t_step"],
+            "csgd_tput": n * local_batch / cs["t_step"],
+            "lsgd_tput": n * local_batch / ls["t_step"],
+        })
+    # scaling efficiency: throughput relative to perfect linear scaling of
+    # the smallest configuration (paper Fig. 6's definition)
+    base_cs = rows[0]["csgd_tput"] / worker_counts[0]
+    base_ls = rows[0]["lsgd_tput"] / worker_counts[0]
+    for r in rows:
+        r["csgd_scaling_eff"] = r["csgd_tput"] / (r["workers"] * base_cs)
+        r["lsgd_scaling_eff"] = r["lsgd_tput"] / (r["workers"] * base_ls)
+    return rows
+
+
+def measure_step_time(fn, *args, iters: int = 3) -> float:
+    """Really time a jitted step on this host (calibration input)."""
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters

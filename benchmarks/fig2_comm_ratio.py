@@ -1,0 +1,47 @@
+"""Paper Fig. 2: all-reduce time, training time, and their ratio per epoch
+for conventional distributed SGD as workers scale.
+
+CSV columns: workers, train_time_s, allreduce_s, ratio.
+The paper's observation to reproduce: total all-reduce time *decreases*
+with more workers (fewer iterations per epoch at fixed local batch) while
+its *ratio* to step time grows past ~64 workers."""
+from __future__ import annotations
+
+from benchmarks import comm_model as cm
+
+WORKERS = [4, 8, 16, 32, 64, 128, 256]
+IMAGES_PER_EPOCH = 1_281_167          # ImageNet-1k train split
+LOCAL_BATCH = 64                      # paper §5.3
+
+
+def run(cluster: cm.ClusterModel = cm.PAPER_CLUSTER):
+    rows = []
+    for n in WORKERS:
+        cs = cm.csgd_step_time(cluster, n)
+        iters = IMAGES_PER_EPOCH / (n * LOCAL_BATCH)
+        train_time = iters * cs["t_step"]
+        ar_time = iters * cs["t_allreduce"]
+        rows.append({"workers": n,
+                     "epoch_train_s": train_time,
+                     "epoch_allreduce_s": ar_time,
+                     "ratio": ar_time / train_time})
+    return rows
+
+
+def main(print_fn=print):
+    rows = run()
+    print_fn("# fig2: CSGD allreduce/train ratio per epoch (paper Fig. 2)")
+    print_fn("workers,epoch_train_s,epoch_allreduce_s,ratio")
+    for r in rows:
+        print_fn(f"{r['workers']},{r['epoch_train_s']:.1f},"
+                 f"{r['epoch_allreduce_s']:.1f},{r['ratio']:.4f}")
+    # paper's qualitative claims
+    assert rows[-1]["epoch_allreduce_s"] < rows[0]["epoch_allreduce_s"], \
+        "total allreduce time should fall with workers"
+    assert rows[-1]["ratio"] > rows[2]["ratio"], \
+        "comm ratio should grow with workers"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

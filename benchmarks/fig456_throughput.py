@@ -1,0 +1,64 @@
+"""Paper Figs. 4-6: LSGD vs CSGD throughput, their ratio, and scaling
+efficiency vs worker count — on (a) the paper's cluster calibration and
+(b) the TPU-v5e projection calibrated from this repo's dry-run roofline.
+
+Paper numbers to land near (Fig. 6): CSGD 63.8 % scaling efficiency at
+256 workers, LSGD 93.1 %; LSGD slightly *slower* than CSGD at 1-2 nodes
+(two-layer communication overhead, Fig. 5)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import comm_model as cm
+
+WORKERS = [4, 8, 16, 32, 64, 128, 256]
+
+
+def paper_rows():
+    return cm.sweep(cm.PAPER_CLUSTER, WORKERS)
+
+
+def tpu_rows(dryrun_dir: str = "experiments/dryrun"):
+    """v5e projection for qwen2-1.5b train_4k: per-chip compute time from
+    the dry-run roofline; gradient payload = f32 grads of the whole net."""
+    t_compute, grad_bytes = 0.030, 1.5e9 * 4
+    rec_path = os.path.join(dryrun_dir,
+                            "qwen2-1.5b__train_4k__sp__lsgd.json")
+    if os.path.exists(rec_path):
+        rec = json.load(open(rec_path))
+        if rec.get("status") == "ok":
+            t_compute = max(rec["roofline"]["compute_s"],
+                            rec["roofline"]["memory_s"])
+            grad_bytes = rec["params"] * 4
+    c = cm.tpu_v5e_cluster(grad_bytes=grad_bytes, t_compute=t_compute,
+                           t_io=0.01, group_size=256)
+    return cm.sweep(c, [256, 512], local_batch=8)
+
+
+def main(print_fn=print):
+    rows = paper_rows()
+    print_fn("# fig4/5/6: throughput + scaling efficiency (paper cluster)")
+    print_fn("workers,csgd_tput,lsgd_tput,lsgd_over_csgd,"
+             "csgd_eff,lsgd_eff")
+    for r in rows:
+        print_fn(f"{r['workers']},{r['csgd_tput']:.0f},{r['lsgd_tput']:.0f},"
+                 f"{r['lsgd_tput']/r['csgd_tput']:.3f},"
+                 f"{r['csgd_scaling_eff']:.3f},{r['lsgd_scaling_eff']:.3f}")
+    last = rows[-1]
+    # the paper's qualitative claims
+    assert last["lsgd_scaling_eff"] > last["csgd_scaling_eff"] + 0.1
+    assert last["lsgd_scaling_eff"] > 0.85
+    assert rows[0]["lsgd_tput"] <= rows[0]["csgd_tput"] * 1.02, \
+        "LSGD should not beat CSGD at one node (two-layer overhead)"
+
+    print_fn("# v5e multi-pod projection (dry-run calibrated)")
+    print_fn("chips,csgd_tput_seq_per_s,lsgd_tput_seq_per_s,ratio")
+    for r in tpu_rows():
+        print_fn(f"{r['workers']},{r['csgd_tput']:.1f},{r['lsgd_tput']:.1f},"
+                 f"{r['lsgd_tput']/r['csgd_tput']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel micro-bench: wall-time of the jnp reference path on this host
+plus analytic TPU-v5e projections for the Pallas kernels.
+
+NOTE: Pallas kernels execute in interpret mode here (CPU container), whose
+wall-time is meaningless; the derived column reports the kernel's v5e
+roofline time (memory-bound bytes / 819 GB/s or MXU FLOPs / 197 TF/s),
+which is what the BlockSpec tiling targets."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+HBM = 819e9
+MXU = 197e12
+
+
+def _time(fn, *args, iters=5):
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(print_fn=print):
+    rows = []
+    ks = jax.random.split(jax.random.key(0), 4)
+
+    # fused update: 1.5B-param-shard update tile (qwen2 per-chip shard)
+    n = 1_500_000_000 // 256
+    w = jax.random.normal(ks[0], (n // 128, 128), jnp.bfloat16)
+    m = jnp.zeros(w.shape, jnp.float32)
+    g = jnp.ones(w.shape, jnp.float32)
+    f = jax.jit(lambda w, m, g: ref.fused_sgd_update(
+        w, m, g, lr=0.1, momentum=0.9, weight_decay=1e-4))
+    us = _time(f, w, m, g)
+    bytes_moved = w.size * (2 + 4 + 4 + 2 + 4)   # r(w,m,g) + w(w,m)
+    rows.append(("fused_update_5.9Mparam_shard", us, bytes_moved / HBM * 1e6))
+
+    # flash attention: one layer's prefill tile (per-chip share of 32k)
+    b, s, h, kv, hd = 1, 2048, 4, 2, 128
+    q = jax.random.normal(ks[1], (b, h, s, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[2], (b, kv, s, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[3], (b, kv, s, hd), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_bhsd(q, k, v))
+    us = _time(fa, q, k, v)
+    flops = 2 * 2 * b * h * s * s * hd / 2      # causal halves it
+    rows.append(("flash_attention_2k_tile", us, flops / MXU * 1e6))
+
+    # flash decode: 32k cache, one token
+    q1 = jax.random.normal(ks[1], (8, h, hd), jnp.bfloat16)
+    k1 = jax.random.normal(ks[2], (8, kv, 32768, hd), jnp.bfloat16)
+    v1 = jax.random.normal(ks[3], (8, kv, 32768, hd), jnp.bfloat16)
+    fd = jax.jit(lambda q, k, v: ref.flash_decode(q, k, v, 32768))
+    us = _time(fd, q1, k1, v1)
+    bytes_moved = k1.size * 2 * 2
+    rows.append(("flash_decode_32k_cache", us, bytes_moved / HBM * 1e6))
+
+    print_fn("# kernels: host jnp-ref wall time vs v5e roofline projection")
+    print_fn("name,us_per_call,derived_v5e_roofline_us")
+    for name, us, derived in rows:
+        print_fn(f"{name},{us:.1f},{derived:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src:. python -m benchmarks.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import load
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def main(print_fn=print, dryrun_dir="experiments/dryrun"):
+    recs = load(dryrun_dir)
+    by_key = {}
+    for r in recs:
+        by_key[(r["arch"], r["shape"], r["mesh"],
+                r.get("sync_mode", "lsgd"))] = r
+
+    for mesh in ("single_pod", "multi_pod"):
+        print_fn(f"\n### Roofline — {mesh} "
+                 f"({'512' if mesh == 'multi_pod' else '256'} chips)\n")
+        print_fn("| arch | shape | step | compute s | memory s | "
+                 "collective s | x-pod s | dominant | 6ND/HLO | "
+                 "HBM args+peak GB/dev | compile s |")
+        print_fn("|---|---|---|---|---|---|---|---|---|---|---|")
+        for shape in SHAPE_ORDER:
+            for (arch, sh, m, mode), r in sorted(by_key.items()):
+                if sh != shape or m != mesh:
+                    continue
+                if r["status"] == "skipped":
+                    print_fn(f"| {arch} | {shape} | — | — | — | — | — | "
+                             f"*skipped: {r['reason']}* | — | — | — |")
+                    continue
+                if r["status"] != "ok":
+                    print_fn(f"| {arch} | {shape} | ERROR | | | | | | | | |")
+                    continue
+                roof = r["roofline"]
+                print_fn(
+                    f"| {arch} | {shape} | {r['step_kind']} "
+                    f"| {roof['compute_s']:.3f} | {roof['memory_s']:.3f} "
+                    f"| {roof['collective_s']:.3f} "
+                    f"| {roof['collective_cross_pod_s']:.3f} "
+                    f"| **{roof['dominant']}** "
+                    f"| {roof['useful_flops_frac']:.2f} "
+                    f"| {fmt_bytes(r['memory']['argument_bytes'])} + "
+                    f"{fmt_bytes(r['memory']['peak_bytes'])} "
+                    f"| {r['compile_s']:.0f} |")
+
+    ok = [r for r in recs if r["status"] == "ok"]
+    sp = [r for r in ok if r["mesh"] == "single_pod"]
+    mp = [r for r in ok if r["mesh"] == "multi_pod"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    er = [r for r in recs if r["status"] == "error"]
+    print_fn(f"\nTotals: {len(sp)} single-pod ok, {len(mp)} multi-pod ok, "
+             f"{len(sk)} skipped (justified), {len(er)} errors.")
+    for r in er:
+        print_fn(f"ERROR: {r['arch']} x {r['shape']} ({r['mesh']}): "
+                 f"{r.get('error','')[:200]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Roofline report: reads experiments/dryrun/*.json (produced by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) three-term
+roofline table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        try:
+            recs.append(json.load(open(p)))
+        except Exception:
+            pass
+    return recs
+
+
+def table(recs: List[Dict], mesh: str = "single_pod") -> List[Dict]:
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mode": r.get("sync_mode", ""),
+            "step": r.get("step_kind", ""),
+            "compute_ms": roof["compute_s"] * 1e3,
+            "memory_ms": roof["memory_s"] * 1e3,
+            "collective_ms": roof["collective_s"] * 1e3,
+            "dominant": roof["dominant"],
+            "useful_flops_frac": roof["useful_flops_frac"],
+            "hbm_peak_gb": r["memory"]["peak_bytes"] / 1e9,
+            "args_gb": r["memory"]["argument_bytes"] / 1e9,
+        })
+    rows.sort(key=lambda x: (x["shape"], x["arch"]))
+    return rows
+
+
+def main(print_fn=print, dryrun_dir: str = "experiments/dryrun"):
+    recs = load(dryrun_dir)
+    if not recs:
+        print_fn("# roofline: no dry-run records found — run "
+                 "`python -m repro.launch.dryrun` first")
+        return []
+    for mesh in ("single_pod", "multi_pod"):
+        rows = table(recs, mesh)
+        if not rows:
+            continue
+        print_fn(f"# roofline [{mesh}] "
+                 "(seconds per step from compiled dry-run)")
+        print_fn("arch,shape,mode,compute_ms,memory_ms,collective_ms,"
+                 "dominant,useful_flops_frac,hbm_args_gb")
+        for r in rows:
+            print_fn(f"{r['arch']},{r['shape']},{r['mode']},"
+                     f"{r['compute_ms']:.2f},{r['memory_ms']:.2f},"
+                     f"{r['collective_ms']:.2f},{r['dominant']},"
+                     f"{r['useful_flops_frac']:.3f},{r['args_gb']:.2f}")
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    print_fn(f"# {len([r for r in recs if r.get('status')=='ok'])} ok, "
+             f"{len(skipped)} skipped, {len(errors)} errors")
+    for r in skipped:
+        print_fn(f"# SKIP {r['arch']} x {r['shape']} ({r['mesh']}): "
+                 f"{r['reason']}")
+    for r in errors:
+        print_fn(f"# ERR {r['arch']} x {r['shape']} ({r['mesh']})")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

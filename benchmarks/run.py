@@ -1,0 +1,43 @@
+"""Benchmark harness: one entry per paper table/figure + roofline + kernel
+micro-bench.  ``python -m benchmarks.run`` prints CSV blocks
+(name,us_per_call,derived where applicable)."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation_sync, fig2_comm_ratio,
+                            fig456_throughput, fig7_equivalence,
+                            kernels_bench, roofline)
+    suites = [
+        ("fig2_comm_ratio", fig2_comm_ratio.main),
+        ("fig456_throughput", fig456_throughput.main),
+        ("fig7_equivalence", fig7_equivalence.main),
+        ("kernels", kernels_bench.main),
+        ("ablation_sync", ablation_sync.main),
+        ("roofline", roofline.main),
+    ]
+    failed = []
+    print("suite,us_per_call,derived")
+    for name, fn in suites:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{dt:.0f},ok")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            print(f"{name},-,FAILED")
+    if failed:
+        print(f"\nFAILED suites: {failed}")
+        sys.exit(1)
+    print("\nall benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

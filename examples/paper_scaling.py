@@ -1,0 +1,44 @@
+"""Reproduce the paper's scaling story (Figs. 2, 4, 5, 6) from the
+communication model calibrated on the paper's cluster, and show where the
+crossover between CSGD and LSGD sits as the I/O budget varies — the
+paper's §5.4 observation that LSGD scales linearly while CSGD decays.
+
+    PYTHONPATH=src:. python -m examples.paper_scaling
+"""
+import dataclasses
+
+from benchmarks import comm_model as cm
+from benchmarks.fig2_comm_ratio import run as fig2_run
+from benchmarks.fig456_throughput import paper_rows
+
+
+def main():
+    print("== paper Fig. 2: CSGD allreduce share per epoch ==")
+    for r in fig2_run():
+        bar = "#" * int(r["ratio"] * 50)
+        print(f"{r['workers']:4d} workers  ratio={r['ratio']:.3f} {bar}")
+
+    print("\n== paper Figs. 4-6: throughput + scaling efficiency ==")
+    rows = paper_rows()
+    print("workers  csgd_tput  lsgd_tput  csgd_eff  lsgd_eff")
+    for r in rows:
+        print(f"{r['workers']:7d}  {r['csgd_tput']:9.0f}  "
+              f"{r['lsgd_tput']:9.0f}  {r['csgd_scaling_eff']:8.1%}  "
+              f"{r['lsgd_scaling_eff']:8.1%}")
+    last = rows[-1]
+    print(f"\n@256 workers: CSGD {last['csgd_scaling_eff']:.1%} vs LSGD "
+          f"{last['lsgd_scaling_eff']:.1%}  "
+          f"(paper: 63.8% vs 93.1%)")
+
+    print("\n== overlap sensitivity: when does I/O stop hiding the global "
+          "all-reduce? ==")
+    for t_io in (0.00, 0.04, 0.08, 0.12, 0.20):
+        c = dataclasses.replace(cm.PAPER_CLUSTER, t_io=t_io)
+        ls = cm.lsgd_step_time(c, 256)
+        print(f"t_io={t_io:.2f}s  lsgd_step={ls['t_step']:.3f}s  "
+              f"global_ar={ls['t_allreduce_global']:.3f}s  "
+              f"hidden={'yes' if ls['overlap_effective'] else 'NO'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Checkpointing: npz-based pytree save/restore, sharding-aware.
+
+No orbax in this environment; this is a small but real implementation:
+leaves are gathered to host (works for sharded global arrays), written
+atomically with their tree paths as keys, and on restore re-placed with
+the shardings of a template pytree.  Step-numbered directories with a
+LATEST pointer support resumable training.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree):
+    flat = {}
+
+    def visit(path, leaf):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def save(ckpt_dir: str, state: Any, step: int) -> str:
+    """Write state under ckpt_dir/step_<n>/ and update LATEST."""
+    out_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(out_dir, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {}
+    meta = {}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        if arr.dtype == np.dtype("bfloat16"):
+            meta[k] = "bfloat16"
+            arr = arr.astype(np.float32)
+        arrays[k] = arr
+    tmp = tempfile.NamedTemporaryFile(dir=out_dir, suffix=".npz",
+                                      delete=False)
+    np.savez(tmp, **arrays)
+    tmp.close()
+    os.replace(tmp.name, os.path.join(out_dir, "arrays.npz"))
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump({"step": step, "bf16_keys": meta}, f)
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
+        f.write(f"step_{step:08d}")
+    return out_dir
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        m = re.match(r"step_(\d+)", f.read().strip())
+    return int(m.group(1)) if m else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure (and shardings) of ``like``."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    bf16 = set(meta.get("bf16_keys", {}))
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat_like = _flatten(like)
+    out = {}
+    for k, leaf in flat_like.items():
+        if k not in data:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        arr = data[k]
+        if k in bf16:
+            arr = arr.astype(jax.numpy.bfloat16)
+        if hasattr(leaf, "sharding") and hasattr(leaf.sharding, "mesh"):
+            out[k] = jax.device_put(arr, leaf.sharding)
+        else:
+            out[k] = jax.numpy.asarray(arr, dtype=leaf.dtype)
+
+    # rebuild the tree
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])

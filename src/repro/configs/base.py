@@ -1,0 +1,286 @@
+"""Config system: model configs, input-shape configs, and the registry.
+
+Every assigned architecture gets one file in this package defining a
+``ModelConfig`` with the exact spec from the assignment sheet (source paper
+/ model card cited in the file docstring).  ``registry.get(name)`` returns
+it; ``--arch <id>`` in the launchers resolves through here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0          # DeepSeek-style always-on experts
+    d_ff_expert: int = 0                 # per-expert hidden dim
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    router_dtype: str = "float32"
+    # layers [0, first_k_dense) use a dense FFN instead of MoE (DeepSeek-V3).
+    first_k_dense: int = 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek Multi-head Latent Attention dims [arXiv:2412.19437]."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD dims [arXiv:2405.21060]."""
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk_size: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma / Griffin RG-LRU dims [arXiv:2402.19427]."""
+    lru_width: int = 0                   # defaults to d_model if 0
+    conv_kernel: int = 4
+    gate_c: float = 8.0                  # the c exponent in a = a_param^(c*r)
+    local_window: int = 2048             # local attention window in hybrid
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"   # dense | moe | ssm | hybrid | audio | vlm | resnet
+    source: str = ""        # citation for the assigned config
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0       # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0       # 0 = full attention
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    activation: str = "swiglu"    # swiglu | gelu
+    tie_embeddings: bool = False
+    max_position_embeddings: int = 1 << 20
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    # hybrid stacks: repeating pattern of layer kinds; empty -> homogeneous.
+    # kinds: "attn", "ssm", "rglru", "local_attn"
+    layer_pattern: Tuple[str, ...] = ()
+
+    # DeepSeek-V3 multi-token prediction depth (extra MTP blocks).
+    mtp_depth: int = 0
+
+    # encoder-decoder (whisper): encoder stack config
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500   # whisper: 30 s of audio @ 50 Hz after conv
+
+    # vlm: number of prefix image-embedding tokens provided by the (stubbed)
+    # vision frontend.  anyres tiling: base tile + 4 sub-tiles @ 576 each.
+    num_image_tokens: int = 0
+
+    # numerics / execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = False
+    scan_layers: bool = True
+    attn_impl: str = "naive"      # naive | blocked | pallas
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    # chunked cross-entropy: compute the vocab projection + CE over
+    # sequence chunks of this length (0 = whole sequence at once).  Avoids
+    # materializing the (B, S, V) f32 logits — the dominant memory-roofline
+    # term for big-vocab training shapes (see EXPERIMENTS.md §Perf).
+    loss_chunk: int = 0
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """The kind of every decoder layer, expanded from layer_pattern."""
+        if self.family == "ssm":
+            return ("ssm",) * self.num_layers
+        if self.layer_pattern:
+            pat = self.layer_pattern
+            return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+        return ("attn",) * self.num_layers
+
+    def ffn_kinds(self) -> Tuple[str, ...]:
+        """'dense' or 'moe' per layer."""
+        if self.moe is None:
+            return ("dense",) * self.num_layers
+        k = self.moe.first_k_dense
+        return tuple("dense" if i < k else "moe" for i in range(self.num_layers))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for roofline 6ND)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_config(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Any] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def available_archs() -> Sequence[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (  # noqa: F401
+        qwen2_1_5b, minicpm_2b, dbrx_132b, qwen1_5_0_5b, h2o_danube_3_4b,
+        deepseek_v3_671b, mamba2_370m, whisper_tiny, recurrentgemma_2b,
+        llava_next_34b, resnet50,
+    )
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests.
+
+    2 layers (or one full pattern repeat for hybrids), d_model<=512,
+    <=4 experts, small vocab.
+    """
+    d_model = min(cfg.d_model, 256)
+    n_heads = min(cfg.num_heads, 4) or 4
+    head_dim = max(d_model // n_heads, 16)
+    n_kv = min(cfg.num_kv_heads, n_heads) or n_heads
+    if cfg.num_kv_heads == 1:
+        n_kv = 1
+    kw: Dict[str, Any] = dict(
+        num_layers=2 if not cfg.layer_pattern else len(cfg.layer_pattern),
+        d_model=d_model,
+        num_heads=n_heads,
+        num_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+        scan_layers=cfg.scan_layers,
+        attn_impl="naive",
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        mtp_depth=cfg.mtp_depth,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 4),
+            num_experts_per_tok=min(cfg.moe.num_experts_per_tok, 2),
+            d_ff_expert=min(cfg.moe.d_ff_expert, 256),
+            first_k_dense=min(cfg.moe.first_k_dense, 1),
+        )
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                              qk_nope_head_dim=32, qk_rope_head_dim=16,
+                              v_head_dim=32)
+        kw["head_dim"] = 32
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, chunk_size=32)
+    if cfg.rglru is not None:
+        kw["rglru"] = dataclasses.replace(
+            cfg.rglru, lru_width=d_model, local_window=64)
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = 2
+        kw["encoder_seq_len"] = 32
+    if cfg.num_image_tokens:
+        kw["num_image_tokens"] = 16
+    return cfg.replace(name=cfg.name + "-smoke", **kw)

@@ -1,0 +1,4 @@
+from repro.core.topology import Topology
+from repro.core.trainer import (TrainerConfig, make_init_state,
+                                make_shardmap_step, make_pjit_step,
+                                make_finalize, state_pspecs, batch_pspecs)

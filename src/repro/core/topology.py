@@ -1,0 +1,47 @@
+"""LSGD topology: which mesh axes form the fast (intra-group) and slow
+(inter-group) communication layers.
+
+Paper mapping (DESIGN.md §2):
+  worker group ("node" in the paper) -> a pod, or a subgroup of the `data`
+    axis when running single-pod (the paper's 4-GPU nodes);
+  communicator layer                 -> the slow axis ("pod"), or the
+    across-subgroup replica groups inside `data`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Topology:
+    fast_axis: str = "data"
+    slow_axis: str = "pod"
+    # If set, the fast axis is subdivided into groups of this size (the
+    # paper's "node" of 4 workers); the across-group reduction joins the
+    # slow phase.  None = the whole fast axis is one group per pod.
+    intra_group_size: Optional[int] = None
+
+    def group_count(self, data_size: int) -> int:
+        g = self.intra_group_size or data_size
+        if data_size % g:
+            raise ValueError(f"data axis {data_size} not divisible by "
+                             f"group size {g}")
+        return data_size // g
+
+    def phase1_groups(self, data_size: int) -> Optional[List[List[int]]]:
+        """axis_index_groups for the intra-group reduce along the fast axis
+        (None = whole axis)."""
+        g = self.intra_group_size
+        if g is None or g == data_size:
+            return None
+        return [list(range(s, s + g)) for s in range(0, data_size, g)]
+
+    def phase2_groups(self, data_size: int) -> Optional[List[List[int]]]:
+        """axis_index_groups for the inter-group all-reduce along the fast
+        axis (one group per intra-group rank; standard 2-level all-reduce).
+        None = no across-group phase needed on the fast axis."""
+        g = self.intra_group_size
+        if g is None or g == data_size:
+            return None
+        return [list(range(r, data_size, g)) for r in range(g)]

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: single-token decode attention over a blocked KV
+cache (the decode_32k / long_500k serving hot loop).
+
+One query vector per (batch, head) attends over the cache in block_kv
+chunks streamed HBM->VMEM; online softmax in VMEM scratch.  Grid
+(B, nk) with nk innermost/sequential.  GQA folds the head group into the
+leading axis of the logits tile ((KV, G, bk) batched dot on the MXU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_kv, n_kv_blocks, kv_heads, group):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    h, hd = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32).reshape(kv_heads, group, hd)
+    k = k_ref[0].astype(jnp.float32)             # (bk, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    kt = jnp.swapaxes(k, 0, 1)                   # (KV, bk, hd)
+    vt = jnp.swapaxes(v, 0, 1)
+
+    logits = jax.lax.dot_general(
+        q, kt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale      # (KV, G, bk)
+    kpos = kb * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                    logits.shape, 2)
+    logits = jnp.where(kpos < len_ref[0, 0], logits, NEG_INF)
+    logits = logits.reshape(h, logits.shape[-1])         # (H, bk)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                          # (H, bk)
+    l_scr[...] = l_prev * alpha + p.sum(-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.reshape(kv_heads, group, -1), vt,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (KV, G, hd)
+    acc_scr[...] = acc_scr[...] * alpha + pv.reshape(h, hd)
+    m_scr[...] = m_new
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_bhd(q, k, v, length, *, block_kv=512, interpret=True):
+    """q (B,H,hd); k,v (B,S,KV,hd); length scalar int32 (#valid slots).
+    hd % 128 == 0, S % block_kv == 0.  Returns (B,H,hd)."""
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    nk = s // block_kv
+    scale = 1.0 / math.sqrt(hd)
+    len_arr = jnp.asarray(length, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(_kernel, scale=scale, block_kv=block_kv,
+                               n_kv_blocks=nk, kv_heads=kvh, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, ki: (0, 0)),
+            pl.BlockSpec((1, h, hd), lambda bi, ki: (bi, 0, 0)),
+            pl.BlockSpec((1, block_kv, kvh, hd), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_kv, kvh, hd), lambda bi, ki: (bi, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, ki: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        scratch_shapes=[_scratch((h, 1)), _scratch((h, 1)),
+                        _scratch((h, hd))],
+        interpret=interpret,
+    )(len_arr, q, k, v)

@@ -1,0 +1,142 @@
+"""Jit'd public wrappers around the Pallas kernels: shape normalization
+(padding to lane/tile alignment), layout transposes, and interpret-mode
+dispatch (this container is CPU-only; on TPU set interpret=False via
+``set_interpret``)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import fused_update as _fu
+
+_INTERPRET = True          # flipped to False on real TPU
+
+
+def set_interpret(value: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = bool(value)
+
+
+# ---------------------------------------------------------------------------
+# fused optimizer update
+# ---------------------------------------------------------------------------
+
+
+def fused_sgd_update(w, m, g, *, lr, momentum: float, weight_decay: float,
+                     nesterov: bool = False, trust=None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Arbitrary-shape fused update; pads/reshapes to (R, 128) tiles."""
+    shape, wd = w.shape, w.dtype
+    n = w.size
+    lane = _fu.LANE
+    rows_blk = _fu.BLOCK_ROWS
+    tile = lane * rows_blk
+    pad = (-n) % tile
+
+    def flat(x, dtype):
+        x = x.reshape(-1).astype(dtype)
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        return x.reshape(-1, lane)
+
+    scal = jnp.stack([jnp.asarray(lr, jnp.float32),
+                      jnp.asarray(1.0 if trust is None else trust,
+                                  jnp.float32)]).reshape(1, 2)
+    w2, m2 = _fu.fused_sgd_update_2d(
+        flat(w, w.dtype), flat(m, m.dtype), flat(g, jnp.float32), scal,
+        momentum=momentum, weight_decay=weight_decay, nesterov=nesterov,
+        interpret=_INTERPRET)
+    w_new = w2.reshape(-1)[:n].reshape(shape)
+    m_new = m2.reshape(-1)[:n].reshape(shape).astype(m.dtype)
+    return w_new, m_new
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill/train fwd)
+# ---------------------------------------------------------------------------
+
+
+def _pad_heads(x, hd_pad):
+    if hd_pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, hd_pad)])
+    return x
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128) -> jax.Array:
+    """q (B,S,H,hd); k,v (B,S,KV,hd) -> (B,S,H,hd).
+
+    Pads hd to a 128 multiple and S to block multiples (padded kv masked
+    via in-kernel seq_len guard; padded q rows discarded)."""
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    hd_pad = (-hd) % 128
+    sq_pad = (-sq) % block_q
+    sk_pad = (-sk) % block_kv
+
+    qt = jnp.moveaxis(_pad_heads(q, hd_pad), 2, 1)     # (B,H,S,hd')
+    kt = jnp.moveaxis(_pad_heads(k, hd_pad), 2, 1)
+    vt = jnp.moveaxis(_pad_heads(v, hd_pad), 2, 1)
+    if sq_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    if sk_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, sk_pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, sk_pad), (0, 0)))
+    if hd_pad:
+        # keep softmax scale consistent with true hd
+        qt = qt * ((hd + hd_pad) ** 0.5 / hd ** 0.5)
+
+    o = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                 block_q=block_q, block_kv=block_kv,
+                                 valid_len=sk, interpret=_INTERPRET)
+    o = o[:, :, :sq, :hd]
+    return jnp.moveaxis(o, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# flash decode (one token vs KV cache)
+# ---------------------------------------------------------------------------
+
+
+def flash_decode(q, k, v, length, *, block_kv: int = 512) -> jax.Array:
+    """q (B,H,hd); k,v (B,S,KV,hd); length = #valid slots -> (B,H,hd)."""
+    b, h, hd = q.shape
+    s = k.shape[1]
+    hd_pad = (-hd) % 128
+    s_pad = (-s) % block_kv
+    qp = _pad_heads(q, hd_pad)
+    kp = _pad_heads(k, hd_pad)
+    vp = _pad_heads(v, hd_pad)
+    if s_pad:
+        kp = jnp.pad(kp, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        vp = jnp.pad(vp, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    if hd_pad:
+        qp = qp * ((hd + hd_pad) ** 0.5 / hd ** 0.5)
+    o = _fd.flash_decode_bhd(qp, kp, vp, length, block_kv=block_kv,
+                             interpret=_INTERPRET)
+    return o[..., :hd]
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk (Mamba-2)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunk(x, dt, dacum, B, C):
+    """x (bc,l,h,p); dt/dacum (bc,l,h); B,C (bc,l,h,n) ->
+    (y (bc,l,h,p), states (bc,h,n,p)).  Pads p/n to 128 lanes."""
+    from repro.kernels import ssd_chunk as _sc
+    bc, l, h, p = x.shape
+    n = B.shape[-1]
+    p_pad = (-p) % 128
+    n_pad = (-n) % 128
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, p_pad))) if p_pad else x
+    Bp = jnp.pad(B, ((0, 0), (0, 0), (0, 0), (0, n_pad))) if n_pad else B
+    Cp = jnp.pad(C, ((0, 0), (0, 0), (0, 0), (0, n_pad))) if n_pad else C
+    y, st = _sc.ssd_chunk_bchp(xp, dt, dacum, Bp, Cp, interpret=_INTERPRET)
+    return y[..., :p], st[:, :, :n, :p]

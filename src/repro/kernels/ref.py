@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets for the
+shape/dtype sweep tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fused_sgd_update(w, m, g, *, lr, momentum, weight_decay, nesterov=False,
+                     trust=None):
+    w32 = w.astype(jnp.float32)
+    m32 = m.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    t = 1.0 if trust is None else trust
+    gp = g32 * t + weight_decay * w32
+    m_new = momentum * m32 + gp
+    upd = gp + momentum * m_new if nesterov else m_new
+    w_new = w32 - lr * upd
+    return w_new.astype(w.dtype), m_new.astype(m.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=0):
+    """q (B,H,S,hd); k,v (B,KV,S,hd) — exact softmax attention."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kvh, g, sq, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def flash_decode(q, k, v, length):
+    """q (B,H,hd); k,v (B,KV,S,hd); length: #valid cache slots (int or
+    (B,) array)."""
+    b, h, hd = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgh,bksh->bkgs", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None] < jnp.asarray(length).reshape(-1, 1)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def ssd_chunk_bchp(x, dt, dacum, B, C):
+    """Oracle for kernels/ssd_chunk.py: x (bc,l,h,p); dt/dacum (bc,l,h);
+    B,C (bc,l,h,n) -> (y (bc,l,h,p), states (bc,h,n,p))."""
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    da = dacum.astype(jnp.float32)
+    scores = jnp.einsum("blhn,bshn->bhls", C.astype(jnp.float32),
+                        B.astype(jnp.float32))
+    decay = jnp.exp(da[:, :, None, :] - da[:, None, :, :])  # (bc,l,s,h)
+    decay = jnp.moveaxis(decay, 3, 1)                        # (bc,h,l,s)
+    l = x.shape[1]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    m = scores * jnp.where(tri[None, None], decay, 0.0)
+    y = jnp.einsum("bhls,bshp->blhp", m, x32 * dt32[..., None])
+    dte = jnp.exp(da[:, -1:, :] - da) * dt32                 # (bc,l,h)
+    st = jnp.einsum("blhn,blhp->bhnp", B.astype(jnp.float32)
+                    * dte[..., None], x32)
+    return y.astype(x.dtype), st

@@ -1,0 +1,166 @@
+"""Compiled-artifact analysis: collective-byte extraction from HLO and the
+three-term roofline (DESIGN.md §7, EXPERIMENTS.md §Roofline).
+
+Calibration notes (verified on this jax/XLA build):
+  * ``compiled.cost_analysis()['flops']`` and ``'bytes accessed'`` are
+    PER-DEVICE for an SPMD-partitioned module.
+  * ``memory_analysis()`` sizes are per-device.
+Roofline terms are therefore computed directly against per-chip peaks.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# `%x = <shape or tuple> <kind>(`  — start instructions only (skip -start/
+# -done pairs' -done half by counting only ...-start or the plain form)
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[0-9, ]*(?:\},\{[0-9, ]*)*\}\}"
+                        r"|\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int                 # result payload bytes (per device)
+    group_size: Optional[int]
+    crosses_pod: Optional[bool]
+    groups_raw: str = ""
+
+
+def parse_collectives(hlo_text: str, *, pod_stride: Optional[int] = None
+                      ) -> List[CollectiveOp]:
+    """Extract collective ops with payload bytes from compiled HLO.
+
+    pod_stride: number of devices per pod (e.g. 256) — device ids whose
+    group spans a multiple of this stride cross the slow inter-pod fabric.
+    """
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        gsize = None
+        crosses = None
+        gm = _GROUPS_RE.search(line)
+        graw = gm.group(1) if gm else ""
+        if graw.startswith("{{"):
+            first = graw[2:].split("}")[0]
+            ids = [int(x) for x in first.split(",") if x.strip()]
+            gsize = len(ids)
+            if pod_stride and len(ids) > 1:
+                crosses = (max(ids) // pod_stride) != (min(ids) // pod_stride)
+        elif graw.startswith("["):
+            dims = graw[1:graw.index("]")].split(",")
+            try:
+                gsize = int(dims[-1])
+            except ValueError:
+                pass
+            # iota groups: conservative — unknown pod crossing
+        ops.append(CollectiveOp(kind=kind, bytes=b, group_size=gsize,
+                                crosses_pod=crosses, groups_raw=graw))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    """Aggregate per-device wire bytes.  Ring algorithmic factors:
+    all-reduce moves 2(n-1)/n * payload per device; AG/RS/A2A move
+    (n-1)/n; collective-permute moves the payload once."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    wire = 0.0
+    wire_slow = 0.0
+    for op in ops:
+        out[op.kind] += op.bytes
+        n = op.group_size or 2
+        if op.kind == "all-reduce":
+            f = 2.0 * (n - 1) / n
+        elif op.kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            f = (n - 1) / n
+        else:
+            f = 1.0
+        w = f * op.bytes
+        wire += w
+        if op.crosses_pod:
+            wire_slow += w
+    out["count"] = len(ops)
+    out["wire_bytes"] = wire
+    out["wire_bytes_cross_pod"] = wire_slow
+    return out
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_slow_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float = 0.0     # 6*N*D (global)
+    hlo_flops_global: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        if self.hlo_flops_global == 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_global
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, float],
+                   n_devices: int, *, model_flops: float = 0.0,
+                   ici_bw: float = mesh_mod.ICI_BW,
+                   dci_bw: float = mesh_mod.DCI_BW) -> Roofline:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    wire = float(coll.get("wire_bytes", 0.0))
+    wire_slow = float(coll.get("wire_bytes_cross_pod", 0.0))
+    return Roofline(
+        compute_s=flops_dev / mesh_mod.PEAK_FLOPS_BF16,
+        memory_s=bytes_dev / mesh_mod.HBM_BW,
+        collective_s=(wire - wire_slow) / ici_bw + wire_slow / dci_bw,
+        collective_slow_s=wire_slow / dci_bw,
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        wire_bytes_per_device=wire,
+        model_flops=model_flops,
+        hlo_flops_global=flops_dev * n_devices,
+    )

@@ -1,0 +1,314 @@
+"""Trip-count-aware HLO accounting.
+
+``compiled.cost_analysis()`` on this XLA build counts a ``while`` body
+ONCE (verified: a 10-iteration scan of a 128x128 matmul reports 4.19
+MFLOP, not 41.9 MFLOP).  Every model here scans over layers, so module-
+level cost analysis under-counts FLOPs, HBM bytes, and — for the FSDP
+path, whose all-gathers live inside the layer scan — collective bytes by
+up to the layer count.
+
+This module re-derives the three roofline inputs directly from
+``compiled.as_text()`` with loop multipliers:
+
+  * computations are parsed into instruction lists;
+  * ``while`` trip counts come from the loop condition (the s32 constant
+    compared against the induction variable with LT/GT);
+  * FLOPs: dot ops = 2 * prod(result_shape) * prod(contracting dims)
+    (model FLOPs here are >99% dots; convolutions appear only in the
+    ResNet example and are counted with the same formula over the kernel);
+  * HBM bytes: operand+result sizes of top-level (post-fusion) ops —
+    each fused kernel reads its inputs and writes its output once, which
+    is exactly XLA:TPU's HBM-traffic model;
+  * collectives: payload bytes scaled by the enclosing loop multiplier.
+
+Costs recurse through fusion/call/while/conditional computation edges.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s4": 1, "u4": 1,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_CALL_REFS = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)"
+    r"%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)")
+_OP_RE = re.compile(r"=\s+(?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\]"
+                    r"(?:\{[^}]*\})?)\s+([a-z][a-z0-9\-]*)\(")
+_RESULT_RE = re.compile(r"=\s+(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\]"
+                        r"(?:\{[^}]*\})?)\s+[a-z]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "copy", "after-all", "custom-call",
+                   "get-dimension-size", "iota"}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """(elements, bytes) of all shapes in a text fragment."""
+    elems = 0
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclass
+class Instr:
+    op: str
+    line: str
+    name: str = ""
+    result: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # %name -> shape
+
+
+_INSTR_NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s+=")
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if line == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            om = _OP_RE.search(line)
+            if om:
+                nm = _INSTR_NAME_RE.match(line)
+                rm = _RESULT_RE.search(line)
+                ins = Instr(om.group(1), line,
+                            name=nm.group(1) if nm else "",
+                            result=rm.group(1) if rm else "")
+                cur.instrs.append(ins)
+                if ins.name:
+                    cur.shapes[ins.name] = ins.result
+    return comps, entry
+
+
+_OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)*)\)")
+
+
+def _operand_names(line: str) -> List[str]:
+    # operands of the op: first (...) group after the op name
+    m = re.search(r"[a-z][a-z0-9\-]*\(([^)]*)\)", line[line.index("= ") + 1:])
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",")
+            if t.strip().startswith("%")]
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res_elems, _ = _shape_elems_bytes(ins.result)
+    ops = _operand_names(ins.line)
+    if not ops:
+        return 0.0
+    lhs_shape = comp.shapes.get(ops[0], "")
+    m = _SHAPE_RE.search(lhs_shape)
+    if not m:
+        return 0.0
+    lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    contract = 1
+    if cm and cm.group(1):
+        for i in cm.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * res_elems * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    res_elems, _ = _shape_elems_bytes(ins.result)
+    ops = _operand_names(ins.line)
+    if len(ops) < 2:
+        return 0.0
+    m = _SHAPE_RE.search(comp.shapes.get(ops[1], ""))
+    if not m:
+        return 0.0
+    # rhs = kernel: spatial dims * input features = prod(all) / out_features
+    kdims = [int(d) for d in m.group(2).split(",") if d]
+    if not kdims:
+        return 0.0
+    return 2.0 * res_elems * (math.prod(kdims) / max(kdims[-1], 1))
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 constant in the loop condition compared with LT/GT."""
+    consts = []
+    for ins in cond.instrs:
+        m = re.search(r"s32\[\]\s+constant\((\d+)\)", ins.line)
+        if m:
+            consts.append(int(m.group(1)))
+    # also look in fused condition computations: handled by caller passing
+    # the flattened module — keep the simple path here
+    return max(consts) if consts else 1
+
+
+@dataclass
+class Account:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: List[Tuple[str, float, str]] = field(default_factory=list)
+    # (kind, payload_bytes_scaled, replica_groups_raw)
+
+
+def _collect_refs(line: str) -> List[str]:
+    out = []
+    for m in _CALL_REFS.finditer(line):
+        for name in m.group(1).split(","):
+            out.append(name.strip().lstrip("%"))
+    return out
+
+
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[0-9, ]*(?:\},\{[0-9, ]*)*\}\}"
+                        r"|\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)")
+
+
+def account(hlo: str) -> Account:
+    comps, entry = parse_module(hlo)
+    if entry is None:
+        return Account()
+    memo: Dict[str, Account] = {}
+
+    def comp_cost(name: str, top_level: bool) -> Account:
+        key = f"{name}:{top_level}"
+        if key in memo:
+            return memo[key]
+        acc = Account()
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = acc
+            return acc
+        for ins in comp.instrs:
+            op = ins.op
+            line = ins.line
+            if op.endswith("-done") or op.endswith("-update-done"):
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            # flops
+            if base == "dot":
+                acc.flops += _dot_flops(ins, comp)
+            elif base == "convolution":
+                acc.flops += _conv_flops(ins, comp)
+            # control flow
+            if base == "while":
+                refs = dict(re.findall(r"(condition|body)=%?([\w\.\-]+)",
+                                       line))
+                trip = _trip_count(comps.get(refs.get("condition", ""),
+                                             Computation("")))
+                body = comp_cost(refs.get("body", ""), True)
+                cond = comp_cost(refs.get("condition", ""), True)
+                acc.flops += trip * (body.flops + cond.flops)
+                acc.bytes += trip * (body.bytes + cond.bytes)
+                for k, b, g in body.collectives + cond.collectives:
+                    acc.collectives.append((k, b * trip, g))
+                continue
+            if base in ("fusion", "call", "conditional", "map",
+                        "reduce", "reduce-window", "scatter", "sort",
+                        "select-and-scatter", "async-start"):
+                for ref in _collect_refs(line):
+                    sub = comp_cost(ref, False)
+                    acc.flops += sub.flops
+                    # fusion internals don't touch HBM; bytes counted at
+                    # the op below
+                    for c in sub.collectives:
+                        acc.collectives.append(c)
+            # collectives
+            if base in COLLECTIVES:
+                rm = _RESULT_RE.search(line)
+                payload = _shape_elems_bytes(rm.group(1))[1] if rm else 0
+                gm = _GROUPS_RE.search(line)
+                acc.collectives.append((base, float(payload),
+                                        gm.group(1) if gm else ""))
+            # HBM bytes: top-level ops only (fused kernel granularity)
+            if top_level and base not in _SKIP_BYTES_OPS \
+                    and base != "while":
+                rbytes = _shape_elems_bytes(ins.result)[1]
+                obytes = sum(
+                    _shape_elems_bytes(comp.shapes.get(o, ""))[1]
+                    for o in _operand_names(line))
+                acc.bytes += rbytes + obytes
+        memo[key] = acc
+        return acc
+
+    return comp_cost(entry, True)
+
+
+def _iota_groups(graw: str):
+    """Materialize iota-format replica groups
+    ``[G,S]<=[d0,d1,...]T(p...)`` exactly (device counts are small)."""
+    import numpy as np
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", graw)
+    if not m:
+        return None
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(d) for d in m.group(3).split(",")]
+    arr = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        arr = arr.transpose([int(p) for p in m.group(4).split(",")])
+    flat = arr.reshape(-1)
+    if flat.size != g * s:
+        return None
+    return flat.reshape(g, s)
+
+
+def collective_ops(acc: Account, pod_stride: Optional[int] = None):
+    """Convert to analysis.CollectiveOp records (scaled payloads)."""
+    from repro.launch.analysis import CollectiveOp
+    ops = []
+    for kind, b, graw in acc.collectives:
+        gsize = None
+        crosses = None
+        if graw.startswith("{{"):
+            first = graw[2:].split("}")[0]
+            ids = [int(x) for x in first.split(",") if x.strip()]
+            gsize = len(ids)
+            if pod_stride and len(ids) > 1:
+                crosses = (max(ids) // pod_stride) != (min(ids) // pod_stride)
+        elif graw.startswith("["):
+            groups = _iota_groups(graw)
+            if groups is not None:
+                gsize = groups.shape[1]
+                if pod_stride and gsize > 1:
+                    crosses = bool(
+                        ((groups.max(1) // pod_stride)
+                         != (groups.min(1) // pod_stride)).any())
+        ops.append(CollectiveOp(kind=kind, bytes=int(b), group_size=gsize,
+                                crosses_pod=crosses, groups_raw=graw))
+    return ops

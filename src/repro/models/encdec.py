@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the assignment carve-out, the audio frontend (mel spectrogram + conv
+feature extractor) is a STUB: ``input_specs()`` supplies precomputed frame
+embeddings of shape (B, encoder_seq_len, d_model).  This module implements
+the transformer itself: non-causal encoder + causal decoder with cross
+attention, layernorm + GELU (Whisper's recipe), sinusoidal positions
+(deviation: Whisper's decoder uses *learned* absolute embeddings; we use
+sinusoidal to stay length-agnostic at the assigned 32k decode shape —
+recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import attention as attn_mod
+from repro.models.layers import (apply_mlp, apply_norm, cross_entropy,
+                                 embed_init, init_mlp, init_norm,
+                                 sinusoidal_pos_emb)
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {"ln1": init_norm(ks[0], cfg.d_model, cfg),
+            "attn": attn_mod.init_attention(ks[1], cfg),
+            "ln2": init_norm(ks[2], cfg.d_model, cfg),
+            "mlp": init_mlp(ks[3], cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {"ln1": init_norm(ks[0], cfg.d_model, cfg),
+            "attn": attn_mod.init_attention(ks[1], cfg),
+            "lnx": init_norm(ks[2], cfg.d_model, cfg),
+            "xattn": attn_mod.init_attention(ks[3], cfg),
+            "ln2": init_norm(ks[4], cfg.d_model, cfg),
+            "mlp": init_mlp(ks[5], cfg)}
+
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "encoder": {"layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+                    "final_norm": init_norm(ks[2], cfg.d_model, cfg)},
+        "decoder": {"layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+                    "final_norm": init_norm(ks[3], cfg.d_model, cfg)},
+        "embed": {"embedding": embed_init(ks[4], (cfg.vocab_size, cfg.d_model),
+                                          cfg.pdtype)},
+    }
+
+
+def encode(params, audio_embeds, cfg):
+    h = audio_embeds.astype(cfg.cdtype)
+    pos = jnp.arange(h.shape[1])
+    h = h + sinusoidal_pos_emb(pos, cfg.d_model, h.dtype)[None]
+    h = sharding.hint(h, ("pod", "data"), None, None)
+
+    def body(carry, lp):
+        x = apply_norm(lp["ln1"], carry, cfg)
+        y, _ = attn_mod.apply_attention(lp["attn"], x, cfg, causal=False,
+                                        use_rope=False)
+        carry = carry + y
+        carry = carry + apply_mlp(lp["mlp"],
+                                  apply_norm(lp["ln2"], carry, cfg), cfg)
+        return carry, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"])
+    return apply_norm(params["encoder"]["final_norm"], h, cfg)
+
+
+def decoder_forward(params, tokens, enc_out, cfg, *, cache=None, pos=None,
+                    make_cache=False, cache_len=0):
+    """Returns (logits, new_cache)."""
+    emb = params["embed"]["embedding"]
+    h = jnp.take(emb, tokens, axis=0).astype(cfg.cdtype)
+    if cache is None:
+        positions = jnp.arange(h.shape[1])
+    else:
+        positions = jnp.asarray(pos)[None]
+    h = h + sinusoidal_pos_emb(positions, cfg.d_model, h.dtype)[None]
+    h = sharding.hint(h, ("pod", "data"), None, None)
+    decode = cache is not None
+
+    def body(carry, xs):
+        if decode:
+            lp, lc = xs
+        else:
+            lp, lc = xs, None
+        x = apply_norm(lp["ln1"], carry, cfg)
+        if decode:
+            y, self_c = attn_mod.apply_attention(
+                lp["attn"], x, cfg, cache={"k": lc["self_k"], "v": lc["self_v"]},
+                pos=pos, use_rope=False)
+        else:
+            y, self_c = attn_mod.apply_attention(
+                lp["attn"], x, cfg, causal=True, use_rope=False,
+                make_cache=make_cache, cache_len=cache_len)
+        carry = carry + y
+        x = apply_norm(lp["lnx"], carry, cfg)
+        if decode:
+            y, _ = attn_mod.apply_attention(
+                lp["xattn"], x, cfg,
+                cache={"k": lc["cross_k"], "v": lc["cross_v"]}, cross=True)
+            cross_c = {"k": lc["cross_k"], "v": lc["cross_v"]}
+        else:
+            y, _ = attn_mod.apply_attention(lp["xattn"], x, cfg, kv_x=enc_out)
+            cross_c = (attn_mod.make_cross_cache(lp["xattn"], enc_out, cfg)
+                       if make_cache else None)
+        carry = carry + y
+        carry = carry + apply_mlp(lp["mlp"],
+                                  apply_norm(lp["ln2"], carry, cfg), cfg)
+        out_c = jnp.zeros((), carry.dtype)
+        if decode or make_cache:
+            out_c = {"self_k": self_c["k"], "self_v": self_c["v"],
+                     "cross_k": cross_c["k"], "cross_v": cross_c["v"]}
+        return carry, out_c
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["decoder"]["layers"], cache) if decode \
+        else params["decoder"]["layers"]
+    h, new_cache = jax.lax.scan(body, h, xs)
+    if not (decode or make_cache):
+        new_cache = None
+    h = apply_norm(params["decoder"]["final_norm"], h, cfg)
+    logits = jnp.einsum("bsd,vd->bsv", h,
+                        params["embed"]["embedding"].astype(h.dtype))
+    return logits, new_cache
+
+
+def loss(params, batch, cfg):
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    logits, _ = decoder_forward(params, batch["tokens"], enc_out, cfg)
+    ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    return ce, {"loss": ce, "ce": ce}
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    single = {"self_k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+              "self_v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+              "cross_k": jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype),
+              "cross_v": jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype)}
+    return jax.tree.map(
+        lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), single)
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    logits, new_cache = decoder_forward(params, tokens, None, cfg,
+                                        cache=cache, pos=pos)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, batch, cfg, cache_len: int):
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    logits, cache = decoder_forward(params, batch["tokens"], enc_out, cfg,
+                                    make_cache=True, cache_len=cache_len)
+    return logits, cache

@@ -1,0 +1,137 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Queries and keys/values are projected through low-rank latents; the KV cache
+stores only the compressed latent c_kv (kv_lora_rank) plus a shared rotary
+key (qk_rope_head_dim) per token.  Decode uses the *absorbed* formulation:
+q_nope is pushed through W^{UK} so attention scores are taken directly
+against the latent cache — the TPU-friendly O(S * kv_lora) per-token path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_norm, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg):
+    a = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+    pd = cfg.pdtype
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, a.q_lora_rank), pd),
+        "q_norm": {"scale": jnp.ones((a.q_lora_rank,), pd)},
+        "wq_b": dense_init(ks[1], (a.q_lora_rank, h * qk), pd),
+        "wkv_a": dense_init(ks[2], (d, a.kv_lora_rank + a.qk_rope_head_dim), pd),
+        "kv_norm": {"scale": jnp.ones((a.kv_lora_rank,), pd)},
+        "wkv_b": dense_init(ks[3], (a.kv_lora_rank,
+                                    h * (a.qk_nope_head_dim + a.v_head_dim)), pd),
+        "wo": dense_init(ks[4], (h * a.v_head_dim, d), pd),
+    }
+
+
+def _project_q(params, x, cfg):
+    a = cfg.mla
+    h = cfg.num_heads
+    qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+    dt = x.dtype
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(dt))
+    cq = apply_norm(params["q_norm"], cq, cfg)
+    q = jnp.einsum("bsr,rk->bsk", cq, params["wq_b"].astype(dt))
+    q = q.reshape(*x.shape[:2], h, qk)
+    return (q[..., :a.qk_nope_head_dim],          # (B,S,H,nope)
+            q[..., a.qk_nope_head_dim:])          # (B,S,H,rope)
+
+
+def _latent_kv(params, x, cfg):
+    a = cfg.mla
+    dt = x.dtype
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dt))
+    c, k_rope = ckv[..., :a.kv_lora_rank], ckv[..., a.kv_lora_rank:]
+    c = apply_norm(params["kv_norm"], c, cfg)
+    return c, k_rope                              # (B,S,r), (B,S,rope)
+
+
+def _wkv_b_split(params, cfg):
+    a = cfg.mla
+    h = cfg.num_heads
+    w = params["wkv_b"]                           # (r, H*(nope+v))
+    w = w.reshape(a.kv_lora_rank, h, a.qk_nope_head_dim + a.v_head_dim)
+    return w[..., :a.qk_nope_head_dim], w[..., a.qk_nope_head_dim:]
+
+
+def apply_mla(params, x, cfg, *, positions=None, cache=None, pos=None,
+              make_cache=False, cache_len=0):
+    """Returns (y, new_cache); cache = {"ckv": (B,Sc,r), "krope": (B,Sc,rope)}."""
+    a = cfg.mla
+    h = cfg.num_heads
+    b = x.shape[0]
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(a.qk_nope_head_dim + a.qk_rope_head_dim)
+    wk, wv = _wkv_b_split(params, cfg)            # (r,H,nope), (r,H,v)
+    wk = wk.astype(dt)
+    wv = wv.astype(dt)
+
+    if cache is None:
+        s = x.shape[1]
+        if positions is None:
+            positions = jnp.arange(s)[None]
+        q_nope, q_rope = _project_q(params, x, cfg)
+        c, k_rope = _latent_kv(params, x, cfg)
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0, :]
+        # expand keys/values from the latent (training path)
+        k_nope = jnp.einsum("bsr,rhn->bshn", c, wk)
+        v = jnp.einsum("bsr,rhv->bshv", c, wv)
+        logits = (jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhn,bsn->bhqs", q_rope, k_rope,
+                               preferred_element_type=jnp.float32)) * scale
+        msk = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+        logits = jnp.where(msk[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+        o = jnp.einsum("bhqs,bshv->bqhv", probs, v)
+        o = o.reshape(b, s, h * a.v_head_dim)
+        y = jnp.einsum("bsk,kd->bsd", o, params["wo"].astype(dt))
+        new_cache = None
+        if make_cache:
+            sc = cache_len or s
+            ckv_c = jnp.zeros((b, sc, a.kv_lora_rank), dt)
+            kr_c = jnp.zeros((b, sc, a.qk_rope_head_dim), dt)
+            n = min(s, sc)
+            ckv_c = ckv_c.at[:, :n].set(c[:, -n:])
+            kr_c = kr_c.at[:, :n].set(k_rope[:, -n:])
+            new_cache = {"ckv": ckv_c, "krope": kr_c}
+        return y, new_cache
+
+    # ---- decode (absorbed) ----
+    ckv_c, kr_c = cache["ckv"], cache["krope"]
+    sc = ckv_c.shape[1]
+    q_nope, q_rope = _project_q(params, x, cfg)    # (B,1,H,*)
+    c, k_rope = _latent_kv(params, x, cfg)         # (B,1,r), (B,1,rope)
+    ppos = pos[None, None] if jnp.ndim(pos) == 0 else pos[:, None]
+    q_rope = apply_rope(q_rope, ppos, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], ppos, cfg.rope_theta)[:, :, 0, :]
+    slot = pos % sc
+    ckv_c = ckv_c.at[:, slot].set(c[:, 0].astype(ckv_c.dtype))
+    kr_c = kr_c.at[:, slot].set(k_rope[:, 0].astype(kr_c.dtype))
+    # absorb: q_lat = q_nope @ W^{UK}  -> scores against latent cache
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhn,bsn->bhqs", q_rope, kr_c,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(sc) <= pos
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_c)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat, wv).reshape(b, 1, h * a.v_head_dim)
+    y = jnp.einsum("bsk,kd->bsd", o, params["wo"].astype(dt))
+    return y, {"ckv": ckv_c, "krope": kr_c}

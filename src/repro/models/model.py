@@ -1,0 +1,122 @@
+"""Uniform model interface over every architecture family.
+
+``build_model(cfg)`` returns a ``Model`` whose members are plain functions
+(jit-compatible, pytree params):
+
+  init(rng)                       -> params
+  loss(params, batch)             -> (scalar, metrics)       train objective
+  init_cache(batch, cache_len)    -> cache pytree            decode state
+  decode_step(params, cache, tokens, pos) -> (logits, cache) serve step
+  prefill(params, batch, cache_len) -> (logits, cache)
+  input_specs(shape)              -> {name: ShapeDtypeStruct} model inputs
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, resnet, transformer
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    init_cache: Optional[Callable]
+    decode_step: Optional[Callable]
+    prefill: Optional[Callable]
+    input_specs: Callable
+    supports_decode: bool = True
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+
+def _lm_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.num_image_tokens:
+        s_img = cfg.num_image_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - s_img), jnp.int32)
+        specs["image_embeds"] = jax.ShapeDtypeStruct((b, s_img, cfg.d_model),
+                                                     cfg.cdtype)
+    return specs
+
+
+def _audio_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"audio_embeds": jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq_len, cfg.d_model), cfg.cdtype),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def _resnet_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {"images": jax.ShapeDtypeStruct((b, 224, 224, 3), cfg.cdtype),
+            "labels": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "resnet":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(resnet.init_params, cfg=cfg),
+            loss=functools.partial(resnet.loss, cfg=cfg),
+            init_cache=None, decode_step=None, prefill=None,
+            input_specs=functools.partial(_resnet_input_specs, cfg),
+            supports_decode=False)
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(encdec.init_params, cfg=cfg),
+            loss=functools.partial(encdec.loss, cfg=cfg),
+            init_cache=functools.partial(encdec.init_cache, cfg),
+            decode_step=functools.partial(encdec.decode_step, cfg=cfg),
+            prefill=functools.partial(encdec.prefill, cfg=cfg),
+            input_specs=functools.partial(_audio_input_specs, cfg))
+    return Model(
+        cfg=cfg,
+        init=functools.partial(transformer.init_params, cfg=cfg),
+        loss=functools.partial(transformer.lm_loss, cfg=cfg),
+        init_cache=functools.partial(transformer.init_cache, cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg=cfg),
+        prefill=functools.partial(transformer.prefill, cfg=cfg),
+        input_specs=functools.partial(_lm_input_specs, cfg))
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (roofline 6*N*D)
+# ---------------------------------------------------------------------------
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count from abstract init; if active_only, routed
+    expert params are scaled by top-k/E (shared experts stay fully
+    counted) — the MoE-active N used in MODEL_FLOPS = 6*N_active*D."""
+    model = build_model(cfg)
+    abstract = model.abstract_params()
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        n = int(np.prod(leaf.shape))
+        pstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        if active_only and "/experts/" in pstr and cfg.moe:
+            n = int(n * cfg.moe.num_experts_per_tok / cfg.moe.num_experts)
+        total += n
+
+    jax.tree_util.tree_map_with_path(visit, abstract)
+    return total

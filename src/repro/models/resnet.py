@@ -1,0 +1,115 @@
+"""ResNet-50 — the paper's own experimental model (He et al. 2016).
+
+Pure JAX (lax.conv).  Normalization deviation recorded in DESIGN.md: the
+paper uses BatchNorm with running statistics; we use batch-statistics-only
+BN (per-shard, the standard local-BN DDP behaviour the paper's PyTorch
+implementation also has), with no running-average state, which keeps the
+train step purely functional.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cross_entropy
+
+STAGES = (3, 4, 6, 3)          # ResNet-50
+WIDTHS = (64, 128, 256, 512)
+
+
+def _conv_init(key, shape, dtype):  # HWIO
+    fan_in = shape[0] * shape[1] * shape[2]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * math.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def _bn_init(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _bn(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mean = x32.mean((0, 1, 2))
+    var = x32.var((0, 1, 2))
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv(w, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _init_bottleneck(key, cin, width, stride, dtype):
+    ks = jax.random.split(key, 4)
+    cout = width * 4
+    p = {"conv1": {"w": _conv_init(ks[0], (1, 1, cin, width), dtype)},
+         "bn1": _bn_init(width, dtype),
+         "conv2": {"w": _conv_init(ks[1], (3, 3, width, width), dtype)},
+         "bn2": _bn_init(width, dtype),
+         "conv3": {"w": _conv_init(ks[2], (1, 1, width, cout), dtype)},
+         "bn3": _bn_init(cout, dtype)}
+    if stride != 1 or cin != cout:
+        p["proj"] = {"w": _conv_init(ks[3], (1, 1, cin, cout), dtype)}
+        p["bn_proj"] = _bn_init(cout, dtype)
+    return p
+
+
+def _bottleneck(p, x, stride):
+    r = x
+    y = jax.nn.relu(_bn(p["bn1"], _conv(p["conv1"]["w"], x)))
+    y = jax.nn.relu(_bn(p["bn2"], _conv(p["conv2"]["w"], y, stride)))
+    y = _bn(p["bn3"], _conv(p["conv3"]["w"], y))
+    if "proj" in p:
+        r = _bn(p["bn_proj"], _conv(p["proj"]["w"], x, stride))
+    return jax.nn.relu(y + r)
+
+
+def init_params(key, cfg, stages: Sequence[int] = STAGES,
+                widths: Sequence[int] = WIDTHS, num_classes: int = 1000):
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 3 + sum(stages))
+    params = {"stem": {"conv": {"w": _conv_init(ks[0], (7, 7, 3, 64), dtype)},
+                       "bn": _bn_init(64, dtype)}}
+    cin = 64
+    i = 1
+    for si, (n, w) in enumerate(zip(stages, widths)):
+        blocks = {}
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blocks[f"block_{bi}"] = _init_bottleneck(ks[i], cin, w, stride,
+                                                     dtype)
+            cin = w * 4
+            i += 1
+        params[f"stage_{si}"] = blocks
+    params["fc"] = {"w": (jax.random.normal(ks[-1], (cin, num_classes),
+                                            jnp.float32) * 0.01).astype(dtype),
+                    "b": jnp.zeros((num_classes,), dtype)}
+    return params
+
+
+def forward(params, images, cfg, stages: Sequence[int] = STAGES):
+    x = images.astype(cfg.cdtype)
+    x = jax.nn.relu(_bn(params["stem"]["bn"],
+                        _conv(params["stem"]["conv"]["w"], x, stride=2)))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, n in enumerate(stages):
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            x = _bottleneck(params[f"stage_{si}"][f"block_{bi}"], x, stride)
+    x = x.mean((1, 2))
+    return jnp.einsum("bc,co->bo", x, params["fc"]["w"].astype(x.dtype)) \
+        + params["fc"]["b"].astype(x.dtype)
+
+
+def loss(params, batch, cfg, stages: Sequence[int] = STAGES):
+    logits = forward(params, batch["images"], cfg, stages)
+    ce = cross_entropy(logits, batch["labels"])
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return ce, {"loss": ce, "ce": ce, "accuracy": acc}

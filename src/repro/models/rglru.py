@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence:  r_t = sigmoid(x_t W_r + b_r)        (recurrence gate)
+             i_t = sigmoid(x_t W_i + b_i)        (input gate)
+             log a_t = -c * softplus(Lambda) * r_t
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses jax.lax.associative_scan over the linear recurrence
+(h_t = a_t h_{t-1} + b_t); decode is the single-step update.  The full
+Griffin recurrent *block* wraps the RG-LRU with a depthwise conv and a
+GeLU-gated branch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_conv1d, dense_init, init_conv1d
+
+
+def init_rglru(key, cfg):
+    g = cfg.rglru
+    d = cfg.d_model
+    w = g.lru_width or d
+    pd = cfg.pdtype
+    ks = jax.random.split(key, 7)
+    p = {"w_x": dense_init(ks[0], (d, w), pd),
+         "w_gate": dense_init(ks[1], (d, w), pd),
+         "w_r": dense_init(ks[2], (w, w), pd),
+         "w_i": dense_init(ks[3], (w, w), pd),
+         "b_r": jnp.zeros((w,), pd),
+         "b_i": jnp.zeros((w,), pd),
+         # Lambda init so that a^c in [0.9, 0.999] at r=1 (Griffin A.2-ish)
+         "lam": jnp.log(jnp.expm1(
+             -jnp.log(jnp.linspace(0.9, 0.999, w)) / g.gate_c)).astype(pd),
+         "w_out": dense_init(ks[4], (w, d), pd)}
+    p.update(init_conv1d(ks[5], w, g.conv_kernel, pd))
+    return p
+
+
+def _lru_scan(a, b, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    a, b: (B, S, W).  h0: (B, W) initial state."""
+    if h0 is not None:
+        # fold h0 into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(params, x, cfg, *, cache=None, make_cache=False):
+    """Griffin recurrent block.  x (B,S,D).
+    cache: {"conv": (B,K-1,W), "h": (B,W)}.  Returns (y, new_cache)."""
+    g = cfg.rglru
+    dt = x.dtype
+    b, s, d = x.shape
+
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate"].astype(dt)))
+    xr = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(dt))
+    conv_cache = cache["conv"] if cache is not None else None
+    xr, new_conv = apply_conv1d({"conv_w": params["conv_w"],
+                                 "conv_b": params["conv_b"]}, xr,
+                                cache=conv_cache)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, params["w_r"].astype(dt))
+                       + params["b_r"].astype(dt))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xr, params["w_i"].astype(dt))
+                       + params["b_i"].astype(dt))
+    log_a = (-g.gate_c * jax.nn.softplus(params["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a); stable via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    bterm = (beta * (i.astype(jnp.float32) * xr.astype(jnp.float32)))
+
+    if s == 1 and cache is not None:
+        h = a[:, 0] * cache["h"].astype(jnp.float32) + bterm[:, 0]
+        hseq = h[:, None]
+        h_last = h
+    else:
+        h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+        hseq = _lru_scan(a, bterm, h0)
+        h_last = hseq[:, -1]
+
+    y = hseq.astype(dt) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"].astype(dt))
+    new_cache = None
+    if cache is not None or make_cache:
+        new_cache = {"conv": new_conv.astype(dt), "h": h_last.astype(dt)}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    g = cfg.rglru
+    w = g.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, g.conv_kernel - 1, w), dtype),
+            "h": jnp.zeros((batch, w), dtype)}

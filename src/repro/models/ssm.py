@@ -1,0 +1,261 @@
+"""Mamba-2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks of length Q plus a linear recurrence over chunk
+states — O(S*Q) work, O(S) memory, TPU-friendly (batched matmuls on the
+MXU).  Decode is the O(1)-per-token state recurrence.
+
+Layout follows the Mamba-2 reference: in_proj -> [z | xBC | dt]; depthwise
+causal conv over xBC; heads of size head_dim with scalar A per head;
+B/C shared across n_groups.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_conv1d, apply_norm, dense_init,
+                                 init_conv1d)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    pd = cfg.pdtype
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    # dt bias such that softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[2], (n_heads,))
+    dt = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min))
+                 + math.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    p = {"in_proj": dense_init(ks[0], (d, d_in_proj), pd),
+         "out_proj": dense_init(ks[1], (d_inner, d), pd),
+         "dt_bias": dt_bias.astype(pd),
+         "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(pd),
+         "D": jnp.ones((n_heads,), pd),
+         "norm": {"scale": jnp.ones((d_inner,), pd)}}
+    p.update(init_conv1d(ks[3], conv_dim, s.conv_kernel, pd))
+    return p
+
+
+def _segsum(x):
+    """Stable 'segment sum' producing the lower-tri decay matrix exponent.
+
+    x: (..., L) -> out (..., L, L) with out[i,j] = sum_{j<k<=i} x[k] for
+    j <= i else -inf.
+    """
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD.
+
+    x:  (b, s, h, p)   — per-head inputs
+    dt: (b, s, h)      — positive step sizes (softplus already applied)
+    A:  (h,)           — negative per-head decay
+    B:  (b, s, g, n)   — input projections (n = d_state)
+    C:  (b, s, g, n)   — output projections
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+    rep = h // g  # heads per group
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)   # (b,nc,l,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]     # (b,nc,l,h) <=0
+    dA_cum = jnp.cumsum(dA, axis=2)                           # within chunk
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))           # (b,nc,h,l,l)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    M = scores * Lmat                                          # (b,nc,h,i,j)
+    xdt = xc * dtc[..., None].astype(xc.dtype)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M.astype(xc.dtype), xdt)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(dA_cum[..., -1:, :] - dA_cum)       # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclhp->bchpn",
+                        (Bh * (decay_to_end * dtc)[..., None]).astype(xc.dtype),
+                        xc)                                    # (b,nc,h,p,n)
+
+    # --- inter-chunk recurrence over states ---
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                 # (b,nc,h)
+
+    def step(carry, inp):
+        st, dcy = inp
+        new = carry * dcy[:, :, None, None].astype(carry.dtype) + st
+        return new, carry                                      # emit prev
+
+    s0 = (jnp.zeros((b, h, p, n), xc.dtype) if init_state is None
+          else init_state.astype(xc.dtype))
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (b,nc,h,p,n)
+
+    # --- inter-chunk contribution ---
+    state_decay = jnp.exp(dA_cum)                              # (b,nc,l,h)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp",
+                       (Ch * state_decay[..., None]).astype(xc.dtype),
+                       prev_states)
+
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y, final
+
+
+def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int,
+                       init_state: Optional[jnp.ndarray] = None):
+    """ssd_chunked with the intra-chunk block on the Pallas kernel
+    (kernels/ssd_chunk.py); inter-chunk recurrence + off-diagonal term
+    stay in jnp.  Same signature/semantics as ssd_chunked."""
+    from repro.kernels import ops as kops
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+    rep = h // g
+
+    xc = x.reshape(b * nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bh = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Ch = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    y_diag, states = kops.ssd_chunk(
+        xc, dtc.reshape(b * nc, chunk, h),
+        dA_cum.reshape(b * nc, chunk, h),
+        Bh.reshape(b * nc, chunk, h, n), Ch.reshape(b * nc, chunk, h, n))
+    y_diag = y_diag.reshape(b, nc, chunk, h, p)
+    states = jnp.swapaxes(states.reshape(b, nc, h, n, p), 3, 4)  # (b,nc,h,p,n)
+
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])
+
+    def step(carry, inp):
+        st, dcy = inp
+        new = carry * dcy[:, :, None, None].astype(carry.dtype) + st
+        return new, carry
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0),
+                   jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)
+
+    state_decay = jnp.exp(dA_cum)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp",
+                       (Ch * state_decay[..., None]).astype(jnp.float32),
+                       prev_states)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def ssd_recurrent_step(state, x_t, dt_t, A, B_t, C_t):
+    """One decode step.  state (b,h,p,n); x_t (b,h,p); dt_t (b,h);
+    B_t/C_t (b,g,n).  Returns (y_t (b,h,p), new_state)."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1)   # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))  # (b,h)
+    new = (state * dA[..., None, None].astype(state.dtype)
+           + jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None].astype(x_t.dtype),
+                        Bh.astype(x_t.dtype)))
+    y = jnp.einsum("bhpn,bhn->bhp", new, Ch.astype(new.dtype))
+    return y, new
+
+
+def apply_ssm(params, x, cfg, *, cache=None, make_cache=False):
+    """Mamba-2 mixer.  x (B,S,D).  cache: {"conv": (B,K-1,convdim),
+    "state": (B,H,P,N)}.  Returns (y, new_cache)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    b, slen, d = x.shape
+    dt_ = x.dtype
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(dt_))
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -n_heads:]
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xBC, new_conv = apply_conv1d({"conv_w": params["conv_w"],
+                                  "conv_b": params["conv_b"]}, xBC,
+                                 cache=conv_cache)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :d_inner].reshape(b, slen, n_heads, s.head_dim)
+    Bm = xBC[..., d_inner:d_inner + s.n_groups * s.d_state] \
+        .reshape(b, slen, s.n_groups, s.d_state)
+    Cm = xBC[..., d_inner + s.n_groups * s.d_state:] \
+        .reshape(b, slen, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if cache is None or slen > 1:
+        init_state = cache["state"] if cache is not None else None
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=s.chunk_size,
+                                     init_state=init_state)
+    else:
+        y_t, final_state = ssd_recurrent_step(
+            cache["state"], xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y_t[:, None]
+
+    y = y + xs * params["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, slen, d_inner)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), cfg)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
+
+    new_cache = None
+    if cache is not None or make_cache:
+        new_cache = {"conv": new_conv.astype(dt_), "state": final_state}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return {"conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+            "state": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), dtype)}

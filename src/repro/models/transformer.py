@@ -1,0 +1,366 @@
+"""Decoder-only transformer assembly.
+
+Layers are grouped into *runs* of identical (mixer-kind, ffn-kind); each run
+is parameter-stacked and executed with ``jax.lax.scan`` (optionally
+rematerialized).  This covers every assigned decoder architecture:
+
+  dense GQA stacks            -> one run of ("attn", "dense")
+  DeepSeek-V3 (3 dense + MoE) -> runs ("attn","dense")x3, ("attn","moe")x58
+  Mamba-2                     -> one run of ("ssm", "none")
+  RecurrentGemma (2 rec:1 att)-> alternating short runs
+  LLaVA backbone              -> dense run with image-embedding prefix
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, cross_entropy,
+                                 dense_init, embed_init, init_mlp, init_norm)
+
+MTP_WEIGHT = 0.3  # DeepSeek-V3 MTP loss weight
+
+
+# ---------------------------------------------------------------------------
+# run structure
+# ---------------------------------------------------------------------------
+
+
+def runs_of(cfg) -> List[Tuple[str, str, int]]:
+    kinds = cfg.layer_kinds()
+    ffns = list(cfg.ffn_kinds())
+    if cfg.family == "ssm" or cfg.d_ff == 0:
+        ffns = ["none"] * cfg.num_layers
+    else:
+        # recurrent/hybrid blocks still carry an MLP
+        pass
+    out: List[List[Any]] = []
+    for k, f in zip(kinds, ffns):
+        if out and out[-1][0] == k and out[-1][1] == f:
+            out[-1][2] += 1
+        else:
+            out.append([k, f, 1])
+    return [tuple(r) for r in out]
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg, kind: str, ffn: str):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_norm(ks[0], cfg.d_model, cfg)}
+    if kind in ("attn", "local_attn"):
+        if cfg.mla is not None and kind == "attn":
+            p["attn"] = mla_mod.init_mla(ks[1], cfg)
+        else:
+            p["attn"] = attn_mod.init_attention(ks[1], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg)
+    elif kind == "rglru":
+        p["rglru"] = rglru_mod.init_rglru(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    if ffn == "dense":
+        p["ln2"] = init_norm(ks[2], cfg.d_model, cfg)
+        p["mlp"] = init_mlp(ks[3], cfg)
+    elif ffn == "moe":
+        p["ln2"] = init_norm(ks[2], cfg.d_model, cfg)
+        p["moe"] = moe_mod.init_moe(ks[3], cfg)
+    return p
+
+
+def _layer_window(cfg, kind: str) -> int:
+    if kind == "local_attn":
+        return cfg.rglru.local_window if cfg.rglru else cfg.sliding_window
+    return cfg.sliding_window
+
+
+def apply_layer(p, h, cfg, kind: str, ffn: str, *, positions, cache=None,
+                pos=None, make_cache=False, cache_len=0):
+    aux = jnp.zeros((), jnp.float32)
+    x = apply_norm(p["ln1"], h, cfg)
+    if kind in ("attn", "local_attn"):
+        window = _layer_window(cfg, kind)
+        if cfg.mla is not None and kind == "attn":
+            y, c = mla_mod.apply_mla(p["attn"], x, cfg, positions=positions,
+                                     cache=cache, pos=pos,
+                                     make_cache=make_cache,
+                                     cache_len=cache_len)
+        else:
+            y, c = attn_mod.apply_attention(
+                p["attn"], x, cfg, positions=positions, window=window,
+                cache=cache, pos=pos, make_cache=make_cache,
+                cache_len=min(cache_len, window) if window else cache_len)
+    elif kind == "ssm":
+        y, c = ssm_mod.apply_ssm(p["ssm"], x, cfg, cache=cache,
+                                 make_cache=make_cache)
+    elif kind == "rglru":
+        y, c = rglru_mod.apply_rglru(p["rglru"], x, cfg, cache=cache,
+                                     make_cache=make_cache)
+    else:
+        raise ValueError(kind)
+    h = h + y
+    if ffn == "dense":
+        h = h + apply_mlp(p["mlp"], apply_norm(p["ln2"], h, cfg), cfg)
+    elif ffn == "moe":
+        y, aux_moe = moe_mod.apply_moe(p["moe"], apply_norm(p["ln2"], h, cfg),
+                                       cfg)
+        h = h + y
+        aux = aux + aux_moe
+    return h, c, aux
+
+
+def init_layer_cache(cfg, kind: str, batch: int, cache_len: int, dtype):
+    if kind in ("attn", "local_attn"):
+        window = _layer_window(cfg, kind)
+        sc = min(cache_len, window) if window else cache_len
+        if cfg.mla is not None and kind == "attn":
+            a = cfg.mla
+            return {"ckv": jnp.zeros((batch, sc, a.kv_lora_rank), dtype),
+                    "krope": jnp.zeros((batch, sc, a.qk_rope_head_dim), dtype)}
+        return {"k": jnp.zeros((batch, sc, cfg.num_kv_heads, cfg.head_dim),
+                               dtype),
+                "v": jnp.zeros((batch, sc, cfg.num_kv_heads, cfg.head_dim),
+                               dtype)}
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# runs: init / apply (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+
+def init_run(key, cfg, kind: str, ffn: str, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_layer(k, cfg, kind, ffn))(keys)
+
+
+def apply_run(rp, h, cfg, kind: str, ffn: str, *, positions, cache=None,
+              pos=None, make_cache=False, cache_len=0):
+    """Scan h through a stacked run.  cache (if given) has leading L axis."""
+    use_cache = cache is not None
+
+    def body(carry, xs):
+        if use_cache:
+            lp, lc = xs
+        else:
+            lp, lc = xs, None
+        hh, c, aux = apply_layer(lp, carry, cfg, kind, ffn,
+                                 positions=positions, cache=lc, pos=pos,
+                                 make_cache=make_cache, cache_len=cache_len)
+        if c is None:
+            c = jnp.zeros((), h.dtype)  # scan needs a concrete ys
+        return hh, (c, aux)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (rp, cache) if use_cache else rp
+    h, (new_cache, auxs) = jax.lax.scan(body, h, xs)
+    if not (use_cache or make_cache):
+        new_cache = None
+    return h, new_cache, auxs.sum()
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    runs = runs_of(cfg)
+    ks = jax.random.split(key, len(runs) + 4)
+    params: Dict[str, Any] = {
+        "embed": {"embedding": embed_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                          cfg.pdtype)},
+        "final_norm": init_norm(ks[1], cfg.d_model, cfg),
+        "layers": {},
+    }
+    for i, (kind, ffn, n) in enumerate(runs):
+        params["layers"][f"run_{i}"] = init_run(ks[2 + i], cfg, kind, ffn, n)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(ks[-2], (cfg.d_model,
+                                                      cfg.vocab_size),
+                                             cfg.pdtype)}
+    if cfg.mtp_depth:
+        mk = jax.random.split(ks[-1], 2)
+        params["mtp"] = {
+            "proj": dense_init(mk[0], (2 * cfg.d_model, cfg.d_model),
+                               cfg.pdtype),
+            "layer": init_layer(mk[1], cfg, "attn", "dense"
+                                if cfg.moe is None else "dense"),
+        }
+    return params
+
+
+def _logits(params, h, cfg):
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        w = params["embed"]["embedding"].astype(dt)  # (V, D)
+        return jnp.einsum("bsd,vd->bsv", h, w)
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"]["w"].astype(dt))
+
+
+def embed_tokens(params, tokens, cfg):
+    emb = params["embed"]["embedding"]
+    return jnp.take(emb, tokens, axis=0).astype(cfg.cdtype)
+
+
+def chunked_lm_ce(params, h, labels, cfg, *, mask_from: int = 0):
+    """Cross-entropy over sequence chunks: the (B, C, V) logits chunk is
+    the only vocab-sized activation alive (vs (B, S, V) in one shot).
+
+    h: (B, S, D) final hidden states; position p predicts labels[p]
+    (already shifted by the caller).  Returns mean nll over positions
+    >= mask_from.
+    """
+    b, s, d = h.shape
+    chunk = min(cfg.loss_chunk or s, s)
+    if s % chunk:
+        chunk = s  # fallback: ragged tail not worth the complexity
+    n = s // chunk
+    hc = h.reshape(b, n, chunk, d).swapaxes(0, 1)        # (n, B, C, D)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)      # (n, B, C)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hx, lx, idx = xs
+        logits = _logits(params, hx, cfg).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        pos = idx * chunk + jnp.arange(chunk)[None]
+        m = jnp.broadcast_to((pos >= mask_from), lx.shape
+                             ).astype(jnp.float32)
+        return (tot + ((logz - ll) * m).sum(), cnt + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, jnp.arange(n)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward(params, batch, cfg, *, cache=None, pos=None, make_cache=False,
+            cache_len=0, need_logits=True):
+    """Returns (logits, new_cache, aux_loss).
+
+    batch: {"tokens": (B,S)} (+ "image_embeds": (B,Si,D) for vlm).
+    Decode mode: tokens (B,1) + cache + pos (scalar int32).
+    """
+    tokens = batch["tokens"]
+    h = embed_tokens(params, tokens, cfg)
+    n_img = 0
+    if cfg.num_image_tokens and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(cfg.cdtype)
+        n_img = img.shape[1]
+        h = jnp.concatenate([img, h], axis=1)
+    h = sharding.hint(h, ("pod", "data"), None, None)
+
+    decode = cache is not None and tokens.shape[1] == 1 and n_img == 0
+    if decode:
+        positions = None
+    else:
+        positions = jnp.arange(h.shape[1])[None]
+
+    runs = runs_of(cfg)
+    new_cache: Optional[Dict[str, Any]] = (
+        {} if (cache is not None or make_cache) else None)
+    aux = jnp.zeros((), jnp.float32)
+    for i, (kind, ffn, n) in enumerate(runs):
+        rp = params["layers"][f"run_{i}"]
+        rc = cache[f"run_{i}"] if cache is not None else None
+        h, nc, a = apply_run(rp, h, cfg, kind, ffn, positions=positions,
+                             cache=rc, pos=pos, make_cache=make_cache,
+                             cache_len=cache_len)
+        if new_cache is not None:
+            new_cache[f"run_{i}"] = nc
+        aux = aux + a
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = _logits(params, h, cfg) if need_logits else None
+    return logits, new_cache, aux, h
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    out = {}
+    for i, (kind, ffn, n) in enumerate(runs_of(cfg)):
+        single = init_layer_cache(cfg, kind, batch, cache_len, dtype)
+        out[f"run_{i}"] = jax.tree.map(
+            lambda x: jnp.zeros((n,) + x.shape, x.dtype), single)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, batch, cfg):
+    tokens = batch["tokens"]
+    chunked = bool(cfg.loss_chunk)
+    logits, _, aux, h = forward(params, batch, cfg,
+                                need_logits=not chunked)
+    n_img = 0
+    if cfg.num_image_tokens and "image_embeds" in batch:
+        n_img = batch["image_embeds"].shape[1]
+    if chunked:
+        # position p (of the combined sequence) predicts combined token
+        # p+1; image positions (p+1 <= n_img-1) are masked out.
+        if n_img:
+            labels_full = jnp.concatenate(
+                [jnp.zeros((tokens.shape[0], n_img), tokens.dtype),
+                 tokens], axis=1)
+        else:
+            labels_full = tokens
+        ce = chunked_lm_ce(params, h[:, :-1], labels_full[:, 1:], cfg,
+                           mask_from=max(n_img - 1, 0))
+    elif n_img:
+        # only text targets (combined position >= n_img) contribute
+        pred_logits = logits[:, n_img - 1:-1]
+        ce = cross_entropy(pred_logits, tokens[:, :pred_logits.shape[1]])
+    else:
+        ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+
+    if cfg.mtp_depth and n_img == 0:
+        # DeepSeek-V3 MTP: one extra block predicting token t+2 from
+        # [h_t ; emb(token_{t+1})].
+        emb_next = embed_tokens(params, tokens[:, 1:], cfg)
+        h_in = jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+        h_mtp = jnp.einsum("bsd,dk->bsk", h_in,
+                           params["mtp"]["proj"].astype(h.dtype))
+        positions = jnp.arange(h_mtp.shape[1])[None]
+        h_mtp, _, _ = apply_layer(params["mtp"]["layer"], h_mtp, cfg, "attn",
+                                  "dense", positions=positions)
+        mtp_logits = _logits(params, h_mtp, cfg)
+        mtp_ce = cross_entropy(mtp_logits[:, :-1], tokens[:, 2:])
+        loss = loss + MTP_WEIGHT * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, batch, cfg, cache_len: int):
+    logits, cache, aux, _ = forward(params, batch, cfg, make_cache=True,
+                                    cache_len=cache_len)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    """tokens (B,1) int32; pos scalar int32 (position of this token)."""
+    logits, new_cache, _, _ = forward(params, {"tokens": tokens}, cfg,
+                                      cache=cache, pos=pos)
+    return logits[:, 0], new_cache

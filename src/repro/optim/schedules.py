@@ -1,0 +1,53 @@
+"""Learning-rate schedules.
+
+* ``linear_scaled_lr`` — the paper's linear scaling rule (§5.3.1, after
+  Goyal et al.): lr = base_lr * global_batch / base_batch.
+* ``warmup_step_decay`` — the paper's schedule: gradual per-iteration warmup
+  from base_lr to peak over `warmup_steps`, then /10 every `decay_every`
+  steps (paper: every 30 epochs).
+* ``wsd`` — MiniCPM's Warmup-Stable-Decay schedule [arXiv:2404.06395]
+  (assigned arch minicpm-2b).
+* ``cosine`` — standard cosine with warmup (used by several assigned archs).
+
+All are (step:int32 array) -> f32 scalar, jit-friendly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_scaled_lr(base_lr: float, global_batch: int,
+                     base_batch: int = 256) -> float:
+    return base_lr * global_batch / base_batch
+
+
+def warmup_step_decay(step, *, base_lr: float, peak_lr: float,
+                      warmup_steps: int, decay_every: int,
+                      decay_factor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr + (peak_lr - base_lr) * jnp.minimum(
+        step / jnp.maximum(warmup_steps, 1), 1.0)
+    n_decays = jnp.floor(jnp.maximum(step - warmup_steps, 0.0)
+                         / jnp.maximum(decay_every, 1))
+    return warm * decay_factor ** n_decays
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, stable_steps: int,
+        decay_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    in_decay = step > (warmup_steps + stable_steps)
+    t = jnp.clip((step - warmup_steps - stable_steps)
+                 / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decayed = peak_lr * (final_frac ** t)
+    return jnp.where(in_decay, decayed, warm)
+
+
+def cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+           final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

@@ -1,0 +1,132 @@
+"""Optimizers, pure-functional.
+
+The paper's recipe (§5.3): SGD, momentum 0.9, weight decay 1e-4, linear
+LR-scaling with warmup + step decay.  PyTorch momentum convention (what the
+paper's implementation, pytorch/examples main.py, uses):
+
+    m <- mu * m + (g + wd * w)
+    w <- w - lr * m
+
+LARS (paper §6 future work — implemented here as the promised extension)
+wraps the same update with a per-tensor trust ratio.
+
+``apply_update`` is the single function the LSGD trainer defers; everything
+(momentum, wd, LARS) is inside the deferral boundary so the parameter
+sequence stays exactly CSGD's.  When ``fused=True`` the elementwise update
+runs through the Pallas fused_update kernel (TPU hot path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    kind: str = "sgd"            # sgd | lars | adamw
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    nesterov: bool = False
+    # LARS
+    lars_eta: float = 0.001
+    lars_eps: float = 1e-9
+    # AdamW
+    beta1: float = 0.9
+    beta2: float = 0.95
+    adam_eps: float = 1e-8
+    # execution
+    fused: bool = False          # use the Pallas fused_update kernel
+    state_dtype: str = "float32"  # momentum/moments dtype (bf16 for 100B+)
+
+
+def init_state(params, cfg: OptimConfig):
+    # optimizer state defaults to f32 regardless of param dtype
+    # (bf16 params + f32 optimizer math; update math upcasts throughout)
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    if cfg.kind in ("sgd", "lars"):
+        return {"m": jax.tree.map(zeros, params)}
+    if cfg.kind == "adamw":
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def _sgd_leaf(w, m, g, lr, cfg: OptimConfig, trust=1.0):
+    g32 = g.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    gw = (g32 * trust) + cfg.weight_decay * w32
+    m_new = cfg.momentum * m.astype(jnp.float32) + gw
+    upd = gw + cfg.momentum * m_new if cfg.nesterov else m_new
+    w_new = w32 - lr * upd
+    return w_new.astype(w.dtype), m_new.astype(m.dtype)
+
+
+def _lars_trust(w, g, cfg: OptimConfig):
+    wn = jnp.linalg.norm(w.astype(jnp.float32))
+    gn = jnp.linalg.norm(g.astype(jnp.float32))
+    trust = cfg.lars_eta * wn / (gn + cfg.weight_decay * wn + cfg.lars_eps)
+    # scalars / 1-d params with ~zero norm: fall back to trust 1
+    return jnp.where((wn > 0) & (gn > 0), trust, 1.0)
+
+
+def apply_update(params, state, grads, lr, cfg: OptimConfig
+                 ) -> Tuple[Any, Any]:
+    """One optimizer step; returns (params', state')."""
+    if cfg.fused:
+        from repro.kernels import ops as kops
+        if cfg.kind in ("sgd", "lars"):
+            def leaf(w, m, g):
+                trust = _lars_trust(w, g, cfg) if cfg.kind == "lars" else None
+                return kops.fused_sgd_update(
+                    w, m, g, lr=lr, momentum=cfg.momentum,
+                    weight_decay=cfg.weight_decay, nesterov=cfg.nesterov,
+                    trust=trust)
+            out = jax.tree.map(leaf, params, state["m"], grads)
+            new_p = jax.tree.map(lambda t: t[0], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            new_m = jax.tree.map(lambda t: t[1], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            return new_p, {"m": new_m}
+
+    if cfg.kind == "sgd":
+        out = jax.tree.map(lambda w, m, g: _sgd_leaf(w, m, g, lr, cfg),
+                           params, state["m"], grads)
+    elif cfg.kind == "lars":
+        def leaf(w, m, g):
+            return _sgd_leaf(w, m, g, lr, cfg, trust=_lars_trust(w, g, cfg))
+        out = jax.tree.map(leaf, params, state["m"], grads)
+    elif cfg.kind == "adamw":
+        step = state.get("t", jnp.zeros((), jnp.int32)) + 1
+
+        def leaf(w, m, v, g):
+            g32, w32 = g.astype(jnp.float32), w.astype(jnp.float32)
+            m_new = cfg.beta1 * m.astype(jnp.float32) + (1 - cfg.beta1) * g32
+            v_new = cfg.beta2 * v.astype(jnp.float32) + (1 - cfg.beta2) * g32 ** 2
+            mh = m_new / (1 - cfg.beta1 ** step)
+            vh = v_new / (1 - cfg.beta2 ** step)
+            w_new = w32 - lr * (mh / (jnp.sqrt(vh) + cfg.adam_eps)
+                                + cfg.weight_decay * w32)
+            return w_new.astype(w.dtype), m_new.astype(m.dtype), \
+                v_new.astype(v.dtype)
+
+        out = jax.tree.map(leaf, params, state["m"], state["v"], grads)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "t": step}
+    else:
+        raise ValueError(cfg.kind)
+
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m}

@@ -1,0 +1,44 @@
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run on the single real CPU device; only the dry-run forces 512.
+jax.config.update("jax_enable_x64", False)
+
+
+def make_batch(cfg, batch=2, seq=24, seed=1):
+    """A batch matching the model family's input_specs."""
+    rng = jax.random.key(seed)
+    if cfg.family == "resnet":
+        return {"images": jax.random.normal(rng, (batch, 224, 224, 3)),
+                "labels": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "audio":
+        return {"audio_embeds": jax.random.normal(
+                    rng, (batch, cfg.encoder_seq_len, cfg.d_model)),
+                "tokens": jax.random.randint(rng, (batch, seq), 0,
+                                             cfg.vocab_size)}
+    if cfg.family == "vlm":
+        return {"tokens": jax.random.randint(
+                    rng, (batch, seq - cfg.num_image_tokens), 0,
+                    cfg.vocab_size),
+                "image_embeds": jax.random.normal(
+                    rng, (batch, cfg.num_image_tokens, cfg.d_model))}
+    return {"tokens": jax.random.randint(rng, (batch, seq), 0,
+                                         cfg.vocab_size)}
+
+
+def tree_max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture
+def rng():
+    return jax.random.key(0)

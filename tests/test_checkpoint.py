@@ -1,0 +1,53 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tree_max_diff
+from repro.checkpoint import checkpoint
+
+
+def _state():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "opt": {"m": {"w": jnp.zeros((2, 3)),
+                          "b": jnp.zeros((3,), jnp.float32)}},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    d = checkpoint.save(str(tmp_path), s, 7)
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), s)
+    r = checkpoint.restore(str(tmp_path), like)
+    assert tree_max_diff(r, s) == 0.0
+    assert r["params"]["b"].dtype == jnp.bfloat16
+    assert int(r["step"]) == 7
+
+
+def test_latest_pointer_advances(tmp_path):
+    s = _state()
+    checkpoint.save(str(tmp_path), s, 7)
+    s2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.bfloat16 else x, s)
+    checkpoint.save(str(tmp_path), s2, 20)
+    assert checkpoint.latest_step(str(tmp_path)) == 20
+    r = checkpoint.restore(str(tmp_path), jax.tree.map(jnp.zeros_like, s))
+    assert int(r["step"]) == 8  # the incremented step leaf from s2
+
+
+def test_restore_specific_step(tmp_path):
+    s = _state()
+    checkpoint.save(str(tmp_path), s, 7)
+    s2 = dict(s)
+    s2["step"] = jnp.int32(9)
+    checkpoint.save(str(tmp_path), s2, 9)
+    r = checkpoint.restore(str(tmp_path), jax.tree.map(jnp.zeros_like, s),
+                           step=7)
+    assert int(r["step"]) == 7
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    import pytest
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore(str(tmp_path), _state())

@@ -1,0 +1,103 @@
+"""The paper's central mathematical claim (§3, §4.2), property-tested:
+Alg. 1 (serial SGD) == Alg. 2 (CSGD) == Alg. 3 (LSGD) parameter sequences
+under the same minibatch partition / hyper-parameters / w0 — for random
+worker counts, group sizes, momentum/wd, LR schedules, and optimizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tree_max_diff
+from repro.configs.base import get_config, smoke_variant
+from repro.core import virtual
+from repro.models.model import build_model
+from repro.optim.sgd import OptimConfig
+from repro.optim import schedules
+
+CFG = smoke_variant(get_config("qwen1.5-0.5b")).replace(
+    num_layers=2, d_model=32, d_ff=64, vocab_size=32, num_heads=2,
+    num_kv_heads=2, head_dim=16)
+MODEL = build_model(CFG)
+P0 = MODEL.init(jax.random.key(0))
+
+
+def _batches(T, B, S, seed=7):
+    rng = jax.random.key(seed)
+    return [{"tokens": jax.random.randint(jax.random.fold_in(rng, t),
+                                          (B, S), 0, CFG.vocab_size)}
+            for t in range(T)]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_workers=st.sampled_from([2, 4, 8]),
+    group_size_idx=st.integers(0, 2),
+    momentum=st.sampled_from([0.0, 0.9]),
+    wd=st.sampled_from([0.0, 1e-4]),
+    nesterov=st.booleans(),
+    steps=st.integers(2, 5),
+)
+def test_alg123_equivalence(n_workers, group_size_idx, momentum, wd,
+                            nesterov, steps):
+    divisors = [g for g in (1, 2, 4, 8) if n_workers % g == 0]
+    group_size = divisors[group_size_idx % len(divisors)]
+    ocfg = OptimConfig(momentum=momentum, weight_decay=wd, nesterov=nesterov)
+    lr_fn = lambda t: 0.05 / (1 + t)
+    B = n_workers * 2
+    batches = _batches(steps, B, 16)
+    wbatches = [virtual.partition_minibatch(b, n_workers) for b in batches]
+
+    p1, l1 = virtual.serial_sgd(MODEL, P0, batches, lr_fn, ocfg)
+    p2, l2 = virtual.csgd(MODEL, P0, wbatches, lr_fn, ocfg)
+    p3, l3 = virtual.lsgd(MODEL, P0, wbatches, lr_fn, ocfg, group_size)
+
+    assert tree_max_diff(p1, p2) < 1e-5
+    assert tree_max_diff(p2, p3) < 1e-5
+    # identical loss trajectories (paper Fig. 7's claim, in expectation 0 gap)
+    np.testing.assert_allclose(l2, l3, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(kind=st.sampled_from(["lars", "adamw"]), steps=st.integers(2, 4))
+def test_equivalence_extends_to_lars_adamw(kind, steps):
+    """LSGD's deferral commutes with any optimizer applied inside the
+    deferral boundary (paper §6 future work: LARS).
+
+    Tolerance note: the two-level mean reassociates float additions
+    (group means then node mean); Adam's 1/sqrt(v) normalization amplifies
+    that ~1e-8 noise to ~1e-4 at the first steps (v ~ g^2), so AdamW gets
+    a looser bound.  In exact arithmetic all variants are identical."""
+    ocfg = OptimConfig(kind=kind)
+    lr_fn = lambda t: 0.01
+    batches = _batches(steps, 8, 16)
+    wbatches = [virtual.partition_minibatch(b, 4) for b in batches]
+    p2, _ = virtual.csgd(MODEL, P0, wbatches, lr_fn, ocfg)
+    p3, _ = virtual.lsgd(MODEL, P0, wbatches, lr_fn, ocfg, 2)
+    assert tree_max_diff(p2, p3) < (5e-3 if kind == "adamw" else 1e-5)
+
+
+def test_lsgd_without_finalize_lags_by_one_update():
+    """Before finalize, LSGD's params equal CSGD's after T-1 steps."""
+    ocfg = OptimConfig()
+    lr_fn = lambda t: 0.05
+    T = 4
+    batches = _batches(T, 8, 16)
+    wbatches = [virtual.partition_minibatch(b, 4) for b in batches]
+    p_csgd_T1, _ = virtual.csgd(MODEL, P0, wbatches[:T - 1], lr_fn, ocfg)
+    p_lsgd, _ = virtual.lsgd(MODEL, P0, wbatches, lr_fn, ocfg, 2,
+                             finalize=False)
+    assert tree_max_diff(p_csgd_T1, p_lsgd) < 1e-6
+
+
+def test_paper_lr_schedule_under_lsgd():
+    """Warmup + step decay (the paper's §5.3.1 recipe) must use lr(t-1)
+    for the deferred update — equivalence catches any off-by-one."""
+    ocfg = OptimConfig(momentum=0.9, weight_decay=1e-4)
+    lr_fn = lambda t: schedules.warmup_step_decay(
+        t, base_lr=0.1, peak_lr=0.4, warmup_steps=3, decay_every=4)
+    batches = _batches(6, 8, 16)
+    wbatches = [virtual.partition_minibatch(b, 4) for b in batches]
+    p2, _ = virtual.csgd(MODEL, P0, wbatches, lr_fn, ocfg)
+    p3, _ = virtual.lsgd(MODEL, P0, wbatches, lr_fn, ocfg, 4)
+    assert tree_max_diff(p2, p3) < 1e-5

@@ -1,0 +1,197 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose against the
+ref.py pure-jnp oracles (interpret mode on CPU; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dt):
+    return dict(atol=3e-2, rtol=3e-2) if dt == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (128,), (1000,), (257, 129),
+                                   (8, 128, 3), (2048, 512)])
+@pytest.mark.parametrize("wdt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nesterov", [False, True])
+def test_fused_update_sweep(shape, wdt, nesterov):
+    ks = jax.random.split(jax.random.key(sum(shape)), 3)
+    w = jax.random.normal(ks[0], shape, jnp.float32).astype(wdt)
+    m = jax.random.normal(ks[1], shape, jnp.float32)
+    g = jax.random.normal(ks[2], shape, jnp.float32)
+    kw = dict(lr=0.05, momentum=0.9, weight_decay=1e-4, nesterov=nesterov)
+    w1, m1 = ops.fused_sgd_update(w, m, g, **kw)
+    w2, m2 = ref.fused_sgd_update(w, m, g, **kw)
+    assert w1.dtype == w.dtype and m1.dtype == m.dtype
+    np.testing.assert_allclose(np.float32(w1), np.float32(w2), **_tol(wdt))
+    np.testing.assert_allclose(np.float32(m1), np.float32(m2), atol=1e-5)
+
+
+def test_fused_update_with_trust_ratio():
+    shape = (300, 40)
+    ks = jax.random.split(jax.random.key(0), 3)
+    w = jax.random.normal(ks[0], shape)
+    m = jnp.zeros(shape)
+    g = jax.random.normal(ks[2], shape)
+    kw = dict(lr=0.1, momentum=0.9, weight_decay=1e-4, trust=jnp.float32(0.37))
+    w1, m1 = ops.fused_sgd_update(w, m, g, **kw)
+    w2, m2 = ref.fused_sgd_update(w, m, g, **kw)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
+
+
+def test_fused_update_traced_lr_under_jit():
+    shape = (512,)
+    w = jnp.ones(shape)
+    m = jnp.zeros(shape)
+    g = jnp.ones(shape)
+
+    @jax.jit
+    def f(lr):
+        return ops.fused_sgd_update(w, m, g, lr=lr, momentum=0.9,
+                                    weight_decay=0.0)[0]
+
+    np.testing.assert_allclose(np.asarray(f(0.5)), 0.5 * np.ones(shape),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    # b, sq, sk, h, kv, hd, causal, window
+    (2, 256, 256, 4, 2, 64, True, 0),
+    (1, 128, 128, 8, 8, 128, True, 0),
+    (2, 200, 200, 2, 1, 80, False, 0),     # unaligned: pads S and hd
+    (1, 384, 384, 4, 2, 64, True, 128),    # sliding window
+    (1, 64, 320, 2, 2, 32, False, 0),      # cross-shape (sq != sk)
+]
+
+
+@pytest.mark.parametrize("case", SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dt):
+    b, sq, sk, h, kv, hd, causal, window = case
+    ks = jax.random.split(jax.random.key(sq + sk + h), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (b, sk, kv, hd), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (b, sk, kv, hd), jnp.float32).astype(dt)
+    o1 = ops.flash_attention(q, k, v, causal=causal, window=window)
+    o2 = jnp.moveaxis(
+        ref.flash_attention_bhsd(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                                 jnp.moveaxis(v, 2, 1), causal=causal,
+                                 window=window), 1, 2)
+    assert o1.shape == q.shape and o1.dtype == q.dtype
+    np.testing.assert_allclose(np.float32(o1), np.float32(o2), **_tol(dt))
+
+
+def test_flash_attention_matches_model_blocked_path():
+    """Kernel vs the model's jnp blocked attention (the exec-path oracle)."""
+    from repro.models import attention as mattn
+    b, s, h, kv, hd = 1, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    qg = q.reshape(b, s, kv, h // kv, hd)
+    o_model = mattn.blocked_attention(qg, k, v, causal=True, block_q=64,
+                                      block_kv=64).reshape(b, s, h, hd)
+    o_kernel = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
+                               atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+DECODE_SHAPES = [
+    # b, s, h, kv, hd, length
+    (2, 512, 8, 2, 64, 300),
+    (1, 1024, 4, 4, 128, 1024),
+    (3, 700, 2, 1, 96, 13),    # unaligned cache + tiny valid length
+]
+
+
+@pytest.mark.parametrize("case", DECODE_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(case, dt):
+    b, s, h, kv, hd, length = case
+    ks = jax.random.split(jax.random.key(s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32).astype(dt)
+    o1 = ops.flash_decode(q, k, v, length)
+    o2 = ref.flash_decode(q, jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+                          length)
+    assert o1.shape == (b, h, hd)
+    np.testing.assert_allclose(np.float32(o1), np.float32(o2), **_tol(dt))
+
+
+def test_flash_decode_equals_model_decode_attention():
+    from repro.models import attention as mattn
+    b, s, h, kv, hd, pos = 2, 256, 4, 2, 64, 100
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    qg = q[:, None].reshape(b, 1, kv, h // kv, hd)
+    o_model = mattn.decode_attention(qg, k, v, jnp.int32(pos)
+                                     ).reshape(b, h, hd)
+    o_kernel = ops.flash_decode(q, k, v, pos + 1)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
+                               atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel (Mamba-2)
+# ---------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # bc, l, h, p, n
+    (2, 32, 4, 64, 128),
+    (1, 16, 2, 32, 64),     # unaligned p/n: pads to 128 lanes
+    (3, 64, 1, 128, 128),
+]
+
+
+@pytest.mark.parametrize("case", SSD_SHAPES)
+@pytest.mark.parametrize("dt_", [jnp.float32, jnp.bfloat16])
+def test_ssd_chunk_sweep(case, dt_):
+    bc, l, h, p, n = case
+    ks = jax.random.split(jax.random.key(l + h), 5)
+    x = (jax.random.normal(ks[0], (bc, l, h, p)) * 0.5).astype(dt_)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bc, l, h)))
+    dA = -jnp.cumsum(jax.nn.softplus(
+        jax.random.normal(ks[2], (bc, l, h))) * 0.1, axis=1)
+    B = (jax.random.normal(ks[3], (bc, l, h, n)) * 0.5).astype(dt_)
+    C = (jax.random.normal(ks[4], (bc, l, h, n)) * 0.5).astype(dt_)
+    y1, s1 = ops.ssd_chunk(x, dt, dA, B, C)
+    y2, s2 = ref.ssd_chunk_bchp(x, dt, dA, B, C)
+    np.testing.assert_allclose(np.float32(y1), np.float32(y2), **_tol(dt_))
+    np.testing.assert_allclose(np.float32(s1), np.float32(s2), **_tol(dt_))
+
+
+def test_ssd_chunked_pallas_matches_jnp_end_to_end():
+    """Whole SSD (kernel intra-chunk + jnp inter-chunk) == pure jnp."""
+    from repro.models import ssm
+    h, p, n, s, chunk = 2, 64, 32, 48, 16
+    ks = jax.random.split(jax.random.key(3), 5)
+    x = jax.random.normal(ks[0], (1, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (1, s, 1, n)) * 0.5
+    C = jax.random.normal(ks[4], (1, s, 1, n)) * 0.5
+    y1, f1 = ssm.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y2, f2 = ssm.ssd_chunked_pallas(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=2e-4,
+                               rtol=2e-4)

@@ -1,0 +1,120 @@
+"""Optimizer + schedule tests (paper recipe: SGD-momentum + linear scaling
++ warmup/step-decay; extensions: LARS, AdamW, WSD)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import schedules
+from repro.optim.sgd import OptimConfig, apply_update, init_state
+
+
+def test_sgd_matches_pytorch_convention():
+    """m <- mu*m + (g + wd*w); w <- w - lr*m (paper's implementation)."""
+    w = {"a": jnp.array([1.0, -2.0])}
+    ocfg = OptimConfig(momentum=0.9, weight_decay=0.1)
+    st_ = init_state(w, ocfg)
+    g = {"a": jnp.array([0.5, 0.5])}
+    w1, st1 = apply_update(w, st_, g, 0.1, ocfg)
+    m_ref = 0.5 + 0.1 * np.array([1.0, -2.0])
+    np.testing.assert_allclose(np.asarray(st1["m"]["a"]), m_ref, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(w1["a"]),
+                               np.array([1.0, -2.0]) - 0.1 * m_ref,
+                               rtol=1e-6)
+    # second step accumulates momentum
+    w2, st2 = apply_update(w1, st1, g, 0.1, ocfg)
+    m2_ref = 0.9 * m_ref + (0.5 + 0.1 * np.asarray(w1["a"]))
+    np.testing.assert_allclose(np.asarray(st2["m"]["a"]), m2_ref, rtol=1e-5)
+
+
+def test_nesterov_differs_from_plain():
+    w = {"a": jnp.ones(4)}
+    g = {"a": jnp.ones(4)}
+    for nesterov in (False, True):
+        ocfg = OptimConfig(momentum=0.9, weight_decay=0.0, nesterov=nesterov)
+        s0 = init_state(w, ocfg)
+        w1, _ = apply_update(w, s0, g, 0.1, ocfg)
+        if nesterov:
+            np.testing.assert_allclose(np.asarray(w1["a"]),
+                                       1 - 0.1 * (1 + 0.9), rtol=1e-6)
+        else:
+            np.testing.assert_allclose(np.asarray(w1["a"]), 1 - 0.1,
+                                       rtol=1e-6)
+
+
+def test_lars_trust_ratio_scales_update():
+    big_w = {"a": jnp.full((10,), 100.0)}
+    ocfg = OptimConfig(kind="lars", momentum=0.0, weight_decay=0.0,
+                       lars_eta=0.01)
+    s0 = init_state(big_w, ocfg)
+    g = {"a": jnp.full((10,), 1.0)}
+    w1, _ = apply_update(big_w, s0, g, 1.0, ocfg)
+    # trust = eta*||w||/||g|| = 0.01*100*sqrt(10)/sqrt(10) = 1.0
+    np.testing.assert_allclose(np.asarray(w1["a"]), 99.0, rtol=1e-4)
+
+
+def test_adamw_first_step_is_lr_sized():
+    w = {"a": jnp.zeros(3)}
+    ocfg = OptimConfig(kind="adamw", weight_decay=0.0)
+    s0 = init_state(w, ocfg)
+    g = {"a": jnp.array([1.0, -1.0, 2.0])}
+    w1, s1 = apply_update(w, s0, g, 0.01, ocfg)
+    np.testing.assert_allclose(np.abs(np.asarray(w1["a"])), 0.01, rtol=1e-3)
+    assert int(s1["t"]) == 1
+
+
+def test_fused_kernel_path_matches_unfused():
+    ks = jax.random.split(jax.random.key(0), 3)
+    w = {"x": jax.random.normal(ks[0], (300,)),
+         "y": jax.random.normal(ks[1], (17, 5))}
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.1, w)
+    for kind in ("sgd", "lars"):
+        o1 = OptimConfig(kind=kind, momentum=0.9, weight_decay=1e-4)
+        o2 = OptimConfig(kind=kind, momentum=0.9, weight_decay=1e-4,
+                         fused=True)
+        s1, s2 = init_state(w, o1), init_state(w, o2)
+        w1, m1 = apply_update(w, s1, g, 0.1, o1)
+        w2, m2 = apply_update(w, s2, g, 0.1, o2)
+        for a, b in zip(jax.tree.leaves((w1, m1)), jax.tree.leaves((w2, m2))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_linear_scaling_rule():
+    """Paper §5.3.1: lr 0.1 at batch 256 -> 6.4 at batch 16384."""
+    assert schedules.linear_scaled_lr(0.1, 16384) == pytest.approx(6.4)
+    assert schedules.linear_scaled_lr(0.1, 256) == pytest.approx(0.1)
+
+
+def test_warmup_step_decay_shape():
+    f = lambda t: float(schedules.warmup_step_decay(
+        t, base_lr=0.1, peak_lr=6.4, warmup_steps=100, decay_every=300))
+    assert f(0) == pytest.approx(0.1)
+    assert f(50) == pytest.approx((0.1 + 6.4) / 2, rel=0.02)
+    assert f(100) == pytest.approx(6.4)
+    assert f(399) == pytest.approx(6.4)          # just before decay
+    assert f(400) == pytest.approx(0.64)         # /10 after 300 post-warmup
+    assert f(700) == pytest.approx(0.064)
+
+
+def test_wsd_phases():
+    f = lambda t: float(schedules.wsd(t, peak_lr=1.0, warmup_steps=10,
+                                      stable_steps=20, decay_steps=10))
+    assert f(0) == 0.0
+    assert f(10) == pytest.approx(1.0)
+    assert f(25) == pytest.approx(1.0)           # stable
+    assert f(40) == pytest.approx(0.1, rel=1e-3)  # decayed to final_frac
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(0, 10000))
+def test_cosine_bounded(t):
+    v = float(schedules.cosine(t, peak_lr=2.0, warmup_steps=100,
+                               total_steps=5000))
+    assert 0.0 <= v <= 2.0 + 1e-6

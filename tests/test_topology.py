@@ -1,0 +1,57 @@
+"""Topology group-math tests: the two-phase replica groups must tile the
+axis exactly and compose to the global mean."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import Topology
+
+
+@settings(max_examples=20, deadline=None)
+@given(data_size=st.sampled_from([2, 4, 8, 16, 32]),
+       gidx=st.integers(0, 4))
+def test_two_phase_groups_compose_to_global_mean(data_size, gidx):
+    divisors = [g for g in (1, 2, 4, 8, 16, 32) if data_size % g == 0]
+    g = divisors[gidx % len(divisors)]
+    topo = Topology(intra_group_size=g)
+    vals = np.random.default_rng(data_size * 31 + g).normal(
+        size=(data_size,))
+
+    p1 = topo.phase1_groups(data_size)
+    p2 = topo.phase2_groups(data_size)
+    out = vals.copy()
+    if p1 is not None:
+        for grp in p1:
+            out[grp] = out[grp].mean()
+    if p2 is not None:
+        for grp in p2:
+            out[grp] = out[grp].mean()
+    if p1 is None and p2 is None:
+        out[:] = out.mean()
+    np.testing.assert_allclose(out, vals.mean(), rtol=1e-12)
+
+
+def test_group_structure():
+    topo = Topology(intra_group_size=4)
+    p1 = topo.phase1_groups(16)
+    p2 = topo.phase2_groups(16)
+    assert p1 == [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9, 10, 11],
+                  [12, 13, 14, 15]]
+    assert p2 == [[0, 4, 8, 12], [1, 5, 9, 13], [2, 6, 10, 14],
+                  [3, 7, 11, 15]]
+    # every device appears exactly once per phase
+    for groups in (p1, p2):
+        flat = sorted(i for g in groups for i in g)
+        assert flat == list(range(16))
+
+
+def test_whole_axis_group_is_none():
+    topo = Topology(intra_group_size=None)
+    assert topo.phase1_groups(16) is None
+    assert topo.phase2_groups(16) is None
+    assert Topology(intra_group_size=16).phase1_groups(16) is None
+
+
+def test_indivisible_group_size_raises():
+    with pytest.raises(ValueError):
+        Topology(intra_group_size=3).group_count(16)
