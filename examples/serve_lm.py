@@ -1,71 +1,93 @@
-"""Serving example: batched prefill + KV-cache decode with a reduced model
-(the decode path the decode_32k / long_500k dry-run shapes exercise).
+"""Serving example — a thin client of the repro.serve engine.
 
-    PYTHONPATH=src python -m examples.serve_lm [--arch mamba2-370m]
+Requests stream in through a thread-safe RequestQueue (host-side
+"tokenization" overlapped with device decode, HostLoader-style); the
+continuous-batching engine admits them mid-flight, interleaves budgeted
+prefill chunks with batched decode over the paged KV cache, and evicts
+finished sequences as their slots free.
+
+    PYTHONPATH=src python -m examples.serve_lm [--arch qwen2-1.5b]
 """
 import argparse
+import dataclasses
+import threading
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config, smoke_variant
 from repro.models.model import build_model
+from repro.serve import Engine, EngineConfig, Request, RequestQueue
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="concurrent decode rows")
+    ap.add_argument("--prompt-len", type=int, default=48,
+                    help="max prompt length (lengths are mixed)")
+    ap.add_argument("--gen-len", type=int, default=32,
+                    help="max new tokens (lengths are mixed)")
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch)).replace(mtp_depth=0)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    print(f"serving {cfg.name}: batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen_len}")
 
-    rng = jax.random.key(1)
-    prompts = jax.random.randint(
-        rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    cache_len = args.prompt_len + args.gen_len
+    max_seq = args.prompt_len + args.gen_len
+    ecfg = EngineConfig(
+        max_batch=args.batch, block_size=16, max_seq_len=max_seq,
+        prefill_chunk=min(32, args.prompt_len),
+        prefill_token_budget=2 * min(32, args.prompt_len),
+        temperature=args.temperature, seed=args.seed)
+    # pool sized so every admissible sequence can reach max_seq_len
+    ecfg = dataclasses.replace(
+        ecfg, num_blocks=(ecfg.max_batch + ecfg.admission_lookahead)
+        * ecfg.blocks_per_seq + 1)
+    eng = Engine(model, params, ecfg)
+    eng.warmup()
+    print(f"serving {cfg.name}: {args.requests} requests, "
+          f"{args.batch} decode rows, paged KV "
+          f"({eng.cfg.num_blocks} x {eng.cfg.block_size}-token blocks)")
 
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
-    decode = jax.jit(model.decode_step)
+    rng = np.random.default_rng(args.seed)
+    queue = RequestQueue(maxsize=args.requests)
 
-    batch = {"tokens": prompts}
-    if cfg.family == "audio":
-        batch["audio_embeds"] = jax.random.normal(
-            rng, (args.batch, cfg.encoder_seq_len, cfg.d_model))
+    def client():
+        # mixed prompt/generation lengths, trickling in
+        for _ in range(args.requests):
+            p = int(rng.integers(args.prompt_len // 4, args.prompt_len + 1))
+            g = int(rng.integers(args.gen_len // 4, args.gen_len + 1))
+            queue.submit(Request(
+                prompt=rng.integers(0, cfg.vocab_size, (p,)),
+                max_new_tokens=g))
+            time.sleep(0.002)
+        queue.close()
 
+    producer = threading.Thread(target=client)
     t0 = time.perf_counter()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: {t_prefill*1e3:.1f} ms "
-          f"({args.batch * args.prompt_len / t_prefill:,.0f} tok/s)")
+    producer.start()
+    with queue:
+        results = eng.run(request_queue=queue)
+    producer.join()
+    wall = time.perf_counter() - t0
 
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    generated = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen_len - 1):
-        pos = jnp.int32(args.prompt_len + i)
-        lg, cache = decode(params, cache, tok, pos)
-        rng, sub = jax.random.split(rng)
-        tok = jax.random.categorical(
-            sub, lg / args.temperature, axis=-1)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    out = jnp.concatenate(generated, axis=1)
-    print(f"decode: {args.gen_len - 1} steps in {t_decode*1e3:.1f} ms "
-          f"({args.batch * (args.gen_len - 1) / t_decode:,.0f} tok/s)")
-    print("sampled token ids (first sequence):",
-          np.asarray(out[0])[:16], "...")
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"  req {rid}: prompt={r.prompt_len:3d} gen={len(r.tokens):3d}"
+              f"  first-token={(r.first_token_time - t0)*1e3:6.1f} ms"
+              f"  tokens={r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
+    tokens = sum(len(r.tokens) for r in results.values())
+    occ = (eng.stats["decode_active_slot_steps"]
+           / max(eng.stats["decode_slot_steps"], 1))
+    print(f"{tokens} tokens in {wall*1e3:.0f} ms "
+          f"({tokens / wall:,.0f} tok/s), decode occupancy {occ:.2f}, "
+          f"{eng.stats['preemptions']} preemptions")
 
 
 if __name__ == "__main__":

@@ -132,13 +132,35 @@ class HostLoader:
         return self
 
     def __next__(self) -> Dict[str, np.ndarray]:
+        if self._stop.is_set():
+            raise StopIteration
         return self._q.get()
 
     def close(self):
+        """Idempotent, race-free shutdown.
+
+        The worker may be parked in ``put`` when the stop flag is set, so
+        a single drain can land *before* its final put and leave it
+        blocked (or leak a batch).  Instead: keep draining until the
+        worker has actually observed the flag and exited, then empty
+        whatever its last put left behind.
+        """
         self._stop.set()
+        while self._thread.is_alive():
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.02)
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-        self._thread.join(timeout=2.0)
+
+    def __enter__(self) -> "HostLoader":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

@@ -60,6 +60,32 @@ def flash_decode(q, k, v, length):
     return o.reshape(b, h, hd).astype(q.dtype)
 
 
+def flash_decode_paged(q, k_pool, v_pool, block_tables, lengths, *,
+                       window=0):
+    """Oracle for the paged decode kernel: q (B,H,hd); pools
+    (nb,bs,KV,hd); block_tables (B,NB); lengths (B,).  Gathers each
+    sequence's blocks into a contiguous (B, NB*bs, KV, hd) view and runs
+    exact masked attention."""
+    b, h, hd = q.shape
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    nb_seq = block_tables.shape[1]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    k = k_pool[block_tables].reshape(b, nb_seq * bs, kvh, hd)
+    v = v_pool[block_tables].reshape(b, nb_seq * bs, kvh, hd)
+    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(nb_seq * bs)[None]
+    ln = jnp.asarray(lengths).reshape(-1, 1)
+    valid = kpos < ln
+    if window:
+        valid &= kpos >= ln - window
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
 def ssd_chunk_bchp(x, dt, dacum, B, C):
     """Oracle for kernels/ssd_chunk.py: x (bc,l,h,p); dt/dacum (bc,l,h);
     B,C (bc,l,h,n) -> (y (bc,l,h,p), states (bc,h,n,p))."""

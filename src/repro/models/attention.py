@@ -162,6 +162,31 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
                       v_cache)
 
 
+def paged_decode_attention(q, k_cache, v_cache, q_positions, *,
+                           window: int = 0):
+    """Attention over a gathered paged KV cache with per-sequence positions.
+
+    q: (B,C,KV,G,hd) — C new tokens per sequence (C=1 decode, C>1 prefill
+    chunk); k_cache,v_cache: (B,S,KV,hd) where slot j holds logical
+    position j; q_positions: (B,C) absolute position of each query.
+    Slots beyond a sequence's frontier hold garbage — masked off because
+    their kpos exceeds every query position.
+    """
+    sk = k_cache.shape[1]
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(sk)
+    m = kpos[None, None, :] <= q_positions[:, :, None]          # (B,C,S)
+    if window:
+        m &= kpos[None, None, :] > q_positions[:, :, None] - window
+    logits = jnp.where(m[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v_cache.dtype),
+                      v_cache)
+
+
 def make_cross_cache(params, kv_x, cfg, num_kv_heads=None):
     """Precompute cross-attention k/v from encoder output (no rope)."""
     kv = num_kv_heads or cfg.num_kv_heads
@@ -260,6 +285,50 @@ def apply_attention(params, x, cfg, *, positions=None, causal=True,
                 vc = vc.at[:, :s].set(v)
             new_cache = {"k": kc, "v": vc}
         return y, new_cache
+
+    # ---- paged decode / chunked prefill ----
+    if "block_tables" in cache:
+        # cache: k/v block pools (nb, bs, KV, hd) + block_tables (B, NB);
+        # pos (B,) is the absolute position of the first new token.  x may
+        # carry C >= 1 tokens — the same code path serves batched decode
+        # (C=1) and budgeted prefill chunks (C=chunk).
+        kpool, vpool, bt = cache["k"], cache["v"], cache["block_tables"]
+        bs_blk = kpool.shape[1]
+        c = x.shape[1]
+        q, k, v = _qkv(params, x, x, cfg, h, kv)
+        positions = pos[:, None] + jnp.arange(c)[None]          # (B,C)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        # scatter the C new k/v rows into each sequence's blocks; logical
+        # block i of sequence b lives at physical block bt[b, i].  Padded
+        # tail positions of a fixed-shape chunk can run past the table —
+        # those writes go to the trash block (physical 0), NEVER clamped
+        # onto the sequence's last real block (that would clobber live
+        # cache a later query still attends to).
+        lblk = positions // bs_blk
+        in_range = lblk < bt.shape[1]
+        blk = jnp.take_along_axis(bt, jnp.minimum(lblk, bt.shape[1] - 1),
+                                  axis=1)                       # (B,C)
+        blk = jnp.where(in_range, blk, 0)
+        slot = positions % bs_blk
+        kpool = kpool.at[blk, slot].set(k.astype(kpool.dtype))
+        vpool = vpool.at[blk, slot].set(v.astype(vpool.dtype))
+        qg = _group(q, kv)
+        if cfg.attn_impl == "pallas" and c == 1:
+            from repro.kernels import ops as kops
+            o = kops.flash_decode_paged(q[:, 0], kpool, vpool, bt,
+                                        pos + 1, window=window)
+            o = o[:, None]
+            o = _group(o, kv)
+        else:
+            nb_seq = bt.shape[1]
+            kc = kpool[bt].reshape(b, nb_seq * bs_blk, kv, cfg.head_dim)
+            vc = vpool[bt].reshape(b, nb_seq * bs_blk, kv, cfg.head_dim)
+            o = paged_decode_attention(qg, kc, vc, positions, window=window)
+        y = o.reshape(b, c, h * cfg.head_dim)
+        y = jnp.einsum("bsk,kd->bsd", y, params["wo"].astype(dt))
+        return y, {"k": kpool, "v": vpool, "block_tables": bt}
 
     # ---- decode ----
     kc, vc = cache["k"], cache["v"]

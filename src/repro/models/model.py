@@ -9,6 +9,12 @@
   decode_step(params, cache, tokens, pos) -> (logits, cache) serve step
   prefill(params, batch, cache_len) -> (logits, cache)
   input_specs(shape)              -> {name: ShapeDtypeStruct} model inputs
+
+Decoder-only LMs additionally expose the paged-KV serving interface used
+by ``repro.serve`` (continuous batching over a shared block pool):
+
+  init_paged_cache(num_blocks, block_size, batch, blocks_per_seq)
+  paged_step(params, cache, tokens, pos)  # tokens (B,C), pos (B,)
 """
 from __future__ import annotations
 
@@ -34,6 +40,9 @@ class Model:
     prefill: Optional[Callable]
     input_specs: Callable
     supports_decode: bool = True
+    # paged-KV serving interface (None for families without a paged form)
+    init_paged_cache: Optional[Callable] = None
+    paged_step: Optional[Callable] = None
 
     def abstract_params(self):
         return jax.eval_shape(self.init, jax.random.key(0))
@@ -87,6 +96,8 @@ def build_model(cfg: ModelConfig) -> Model:
             decode_step=functools.partial(encdec.decode_step, cfg=cfg),
             prefill=functools.partial(encdec.prefill, cfg=cfg),
             input_specs=functools.partial(_audio_input_specs, cfg))
+    paged_ok = cfg.mla is None and all(
+        k in ("attn", "local_attn") for k in cfg.layer_kinds())
     return Model(
         cfg=cfg,
         init=functools.partial(transformer.init_params, cfg=cfg),
@@ -94,7 +105,11 @@ def build_model(cfg: ModelConfig) -> Model:
         init_cache=functools.partial(transformer.init_cache, cfg),
         decode_step=functools.partial(transformer.decode_step, cfg=cfg),
         prefill=functools.partial(transformer.prefill, cfg=cfg),
-        input_specs=functools.partial(_lm_input_specs, cfg))
+        input_specs=functools.partial(_lm_input_specs, cfg),
+        init_paged_cache=(functools.partial(transformer.init_paged_cache, cfg)
+                          if paged_ok else None),
+        paged_step=(functools.partial(transformer.paged_step, cfg=cfg)
+                    if paged_ok else None))
 
 
 # ---------------------------------------------------------------------------

@@ -292,6 +292,59 @@ def forward(params, batch, cfg, *, cache=None, pos=None, make_cache=False,
     return logits, new_cache, aux, h
 
 
+def init_paged_cache(cfg, num_blocks: int, block_size: int, batch: int,
+                     blocks_per_seq: int, dtype=None):
+    """Paged decode state: per-layer K/V block pools shared by every
+    sequence, plus per-sequence block tables (identical across layers —
+    the serve engine rewrites them each step).
+
+    Physical block 0 is the trash block: inactive batch slots point their
+    whole table at it, so their writes land somewhere harmless and their
+    reads are masked by position.
+    """
+    dtype = dtype or cfg.cdtype
+    if cfg.mla is not None:
+        raise NotImplementedError("paged cache: MLA latent KV not yet paged")
+    out = {}
+    for i, (kind, ffn, n) in enumerate(runs_of(cfg)):
+        if kind not in ("attn", "local_attn"):
+            raise NotImplementedError(
+                f"paged cache: layer kind {kind!r} has no paged form")
+        out[f"run_{i}"] = {
+            "k": jnp.zeros((n, num_blocks, block_size, cfg.num_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((n, num_blocks, block_size, cfg.num_kv_heads,
+                            cfg.head_dim), dtype),
+            "block_tables": jnp.zeros((n, batch, blocks_per_seq), jnp.int32),
+        }
+    return out
+
+
+def with_block_tables(cache, block_tables):
+    """Return ``cache`` with every run's block tables replaced by
+    ``block_tables`` (B, NB) — broadcast over the stacked layer axis."""
+    out = {}
+    for run, rc in cache.items():
+        n = rc["k"].shape[0]
+        out[run] = {"k": rc["k"], "v": rc["v"],
+                    "block_tables": jnp.broadcast_to(
+                        block_tables, (n,) + block_tables.shape)}
+    return out
+
+
+def paged_step(params, cache, tokens, pos, cfg):
+    """Unified continuous-batching step over a paged cache.
+
+    tokens: (B, C) int32 — C=1 for batched decode, C=chunk for a prefill
+    chunk; pos: (B,) int32 absolute position of each row's first token.
+    Returns (logits (B, C, V), cache) — caller samples from the logit at
+    its own frontier.
+    """
+    logits, new_cache, _, _ = forward(params, {"tokens": tokens}, cfg,
+                                      cache=cache, pos=pos)
+    return logits, new_cache
+
+
 def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     dtype = dtype or cfg.cdtype
     out = {}

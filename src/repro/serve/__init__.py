@@ -1,0 +1,17 @@
+"""repro.serve — continuous-batching inference on top of the paged-KV
+model interface (Model.init_paged_cache / Model.paged_step).
+
+  engine.Engine        admission -> chunked prefill -> batched decode loop
+  kv_cache             block pool allocator + per-sequence block tables
+  scheduler            FCFS policy with a prefill-token budget; RequestQueue
+  router               data-parallel replica placement over Topology axes
+"""
+from repro.serve.engine import Engine, EngineConfig, RequestResult
+from repro.serve.kv_cache import BlockAllocator, PagedKVCache
+from repro.serve.router import Replica, ReplicaRouter
+from repro.serve.scheduler import Request, RequestQueue, Scheduler
+
+__all__ = [
+    "BlockAllocator", "Engine", "EngineConfig", "PagedKVCache", "Replica",
+    "ReplicaRouter", "Request", "RequestQueue", "RequestResult", "Scheduler",
+]

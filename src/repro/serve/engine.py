@@ -1,0 +1,335 @@
+"""Continuous-batching inference engine over a paged KV cache.
+
+Each ``step()`` is one engine iteration:
+
+  1. drain newly arrived requests (via ``run()``'s RequestQueue),
+  2. run the scheduler's budgeted prefill work as ONE fused fixed-shape
+     (prefill_rows, prefill_chunk) call — rows carry different sequences
+     at different positions, which the paged cache makes free,
+  3. run ONE batched (max_batch, 1) decode step for every ready
+     sequence, then evict finished sequences and free their blocks.
+
+Because block tables, positions, and tokens are rebuilt for every call,
+decode rows carry no state between steps — a sequence's identity lives
+entirely in its block table.  Admission therefore isn't tied to a decode
+row: the engine admits ``admission_lookahead`` sequences beyond
+max_batch so a freshly finished row is backfilled by an already-prefilled
+("ready") sequence with zero idle steps — the serving analogue of LSGD
+prefetching the next minibatch under the collective.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.scheduler import Request, RequestQueue, Scheduler
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8              # decode rows per step
+    block_size: int = 16            # tokens per KV block
+    num_blocks: int = 257           # pool size incl. trash block 0
+    max_seq_len: int = 256          # per-sequence prompt+gen ceiling
+    prefill_chunk: int = 32         # tokens per prefill row (padded shape)
+    prefill_token_budget: int = 64  # max prefill tokens per engine step
+    admission_lookahead: int = 2    # prompts prefilled ahead of a free row
+    temperature: float = 0.0        # 0 => greedy
+    seed: int = 0
+
+    @property
+    def blocks_per_seq(self) -> int:
+        return -(-self.max_seq_len // self.block_size)
+
+    @property
+    def prefill_rows(self) -> int:
+        """Rows in the fused prefill call — enough for a full budget of
+        max-size chunks (the scheduler grants no more per step)."""
+        return max(1, min(self.max_batch,
+                          self.prefill_token_budget // self.prefill_chunk))
+
+    @property
+    def decode_buckets(self) -> List[int]:
+        """Decode batch shapes, largest first: full batch plus half/quarter
+        buckets so the drain phase (few live sequences left) doesn't pay
+        full-batch compute per step."""
+        out = []
+        b = self.max_batch
+        while b >= 1 and len(out) < 3:
+            out.append(b)
+            b = -(-b // 2) if b > 1 else 0
+        return out
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: List[int]
+    arrival_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+    preempted: int = 0
+
+
+@dataclass(eq=False)        # identity equality (held in ordered lists)
+class _Seq:
+    req: Request
+    out: List[int] = field(default_factory=list)
+    first_token_time: float = 0.0
+    prefill_done: bool = False
+
+    @property
+    def next_pos(self) -> int:
+        """Position of the next token fed to decode (the last sampled
+        token goes in at prompt_len + generated-so-far - 1)."""
+        return len(self.req.prompt) + len(self.out) - 1
+
+
+class Engine:
+    """Continuous-batching engine; single data-parallel replica."""
+
+    def __init__(self, model, params, cfg: EngineConfig = EngineConfig()):
+        if model.paged_step is None:
+            raise ValueError(
+                f"{model.cfg.name}: family {model.cfg.family!r} has no "
+                "paged-KV serving path")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.kv = PagedKVCache(cfg.num_blocks, cfg.block_size,
+                               cfg.blocks_per_seq)
+        self.scheduler = Scheduler(
+            cfg.max_batch + cfg.admission_lookahead, cfg.prefill_chunk,
+            cfg.prefill_token_budget, max_chunks_per_step=cfg.prefill_rows)
+        self.cache = model.init_paged_cache(
+            cfg.num_blocks, cfg.block_size, cfg.max_batch,
+            cfg.blocks_per_seq)
+        self._step_fn = jax.jit(model.paged_step, donate_argnums=(1,))
+        self._live: List[_Seq] = []     # admission (FCFS) order
+        self._rng = np.random.default_rng(cfg.seed)
+        self._preempt_counts: Dict[int, int] = {}
+        self._first_token_times: Dict[int, float] = {}
+        # telemetry for the bench report
+        self.stats = {"steps": 0, "decode_steps": 0, "decode_slot_steps": 0,
+                      "decode_active_slot_steps": 0, "prefill_tokens": 0,
+                      "generated_tokens": 0, "preemptions": 0}
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        if total > self.cfg.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new_tokens={total} exceeds "
+                f"max_seq_len={self.cfg.max_seq_len}")
+        self.scheduler.add(req)
+
+    # -- internals ----------------------------------------------------------
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        if self.cfg.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / self.cfg.temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._rng.choice(p.size, p=p))
+
+    def _seq_of(self, rid: int) -> Optional[_Seq]:
+        for s in self._live:
+            if s.req.rid == rid:
+                return s
+        return None
+
+    def _run_model(self, tokens: np.ndarray, pos: np.ndarray,
+                   tables: np.ndarray):
+        cache = transformer.with_block_tables(self.cache,
+                                              jnp.asarray(tables))
+        logits, self.cache = self._step_fn(
+            self.params, cache, jnp.asarray(tokens), jnp.asarray(pos))
+        return np.asarray(jax.device_get(logits), np.float32)
+
+    def _prefill(self, chunks, now: float,
+                 finished: List[RequestResult]) -> None:
+        """All of this step's prefill chunks ride ONE fixed-shape
+        (prefill_rows, prefill_chunk) call: rows carry different sequences
+        at different positions — per-row pos + block tables make that free
+        under the paged cache (unused rows write into the trash block).
+        The scheduler grants <= prefill_rows chunks per step."""
+        if not chunks:
+            return
+        b, c = self.cfg.prefill_rows, self.cfg.prefill_chunk
+        assert len(chunks) <= b
+        tokens = np.zeros((b, c), np.int32)
+        pos = np.zeros((b,), np.int32)
+        rids: List[Optional[int]] = [None] * b
+        for row, ch in enumerate(chunks):
+            tokens[row, :ch.length] = \
+                ch.req.prompt[ch.start:ch.start + ch.length]
+            pos[row] = ch.start
+            rids[row] = ch.req.rid
+            if self._seq_of(ch.req.rid) is None:     # fresh admission
+                self._live.append(_Seq(ch.req))
+        logits = self._run_model(tokens, pos, self.kv.table_array(rids))
+        for row, ch in enumerate(chunks):
+            self.stats["prefill_tokens"] += ch.length
+            if ch.start + ch.length >= len(ch.req.prompt):
+                # prompt complete: the logit at its last real token is the
+                # first generated token
+                seq = self._seq_of(ch.req.rid)
+                tok = self._sample(logits[row, ch.length - 1])
+                seq.out.append(tok)
+                seq.prefill_done = True
+                # a recomputed (preempted) request already delivered its
+                # first token before eviction — keep the original TTFT
+                seq.first_token_time = self._first_token_times.pop(
+                    ch.req.rid, now)
+                self.stats["generated_tokens"] += 1
+                # the first token can already satisfy the stop conditions
+                if (len(seq.out) >= seq.req.max_new_tokens
+                        or (seq.req.eos_id is not None
+                            and tok == seq.req.eos_id)):
+                    self._evict(seq, now, finished)
+
+    def _evict(self, seq: _Seq, now: float, finished: List[RequestResult]
+               ) -> None:
+        self._live.remove(seq)
+        self.kv.free_seq(seq.req.rid)
+        self.scheduler.forget(seq.req)
+        self._first_token_times.pop(seq.req.rid, None)
+        # tokens a preempted request generated pre-eviction live in the
+        # recompute prompt suffix; stitch the full generation back together
+        regen = list(seq.req.prompt[seq.req.orig_prompt_len:])
+        finished.append(RequestResult(
+            rid=seq.req.rid, prompt_len=seq.req.orig_prompt_len,
+            tokens=regen + list(seq.out),
+            arrival_time=seq.req.arrival_time,
+            first_token_time=seq.first_token_time, finish_time=now,
+            preempted=self._preempt_counts.pop(seq.req.rid, 0)))
+
+    def _preempt_one(self, exclude_rid: int) -> bool:
+        """Kick the most recently admitted live sequence back to the
+        waiting line (recompute mode) and reclaim its blocks."""
+        for victim in reversed(self._live):
+            if victim.req.rid == exclude_rid:
+                continue
+            self._live.remove(victim)
+            self.kv.free_seq(victim.req.rid)
+            self.scheduler.preempt(victim.req, victim.out)
+            rid = victim.req.rid
+            if victim.prefill_done:
+                self._first_token_times[rid] = victim.first_token_time
+            self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
+            self.stats["preemptions"] += 1
+            return True
+        return False
+
+    def _decode(self, now: float, finished: List[RequestResult]) -> None:
+        # up to max_batch ready sequences decode, FCFS by admission; the
+        # lookahead tail waits (its prefilled state keeps: identity lives
+        # in the block tables, not in a row)
+        active = [s for s in self._live if s.prefill_done]
+        active = active[:self.cfg.max_batch]
+        if not active:
+            return
+        # grow each sequence's table to cover the token being written;
+        # preempt LIFO victims if the pool is out of blocks
+        for seq in active:
+            while not self.kv.ensure_capacity(seq.req.rid,
+                                              seq.next_pos + 1):
+                if not self._preempt_one(exclude_rid=seq.req.rid):
+                    raise RuntimeError(
+                        "KV pool too small for a single sequence; raise "
+                        "num_blocks or lower max_seq_len")
+        # preemption may have evicted other members of `active`
+        active = [s for s in active if s in self._live]
+        if not active:
+            return
+        # smallest compiled bucket that fits (rows are stateless, so the
+        # drain phase legitimately runs a narrower batch)
+        b = min(k for k in self.cfg.decode_buckets if k >= len(active))
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        rids: List[Optional[int]] = [None] * b
+        for row, seq in enumerate(active):
+            tokens[row, 0] = seq.out[-1]
+            pos[row] = seq.next_pos
+            rids[row] = seq.req.rid
+        logits = self._run_model(tokens, pos, self.kv.table_array(rids))
+        self.stats["decode_steps"] += 1
+        self.stats["decode_slot_steps"] += b
+        self.stats["decode_active_slot_steps"] += len(active)
+        for row, seq in enumerate(active):
+            tok = self._sample(logits[row, 0])
+            seq.out.append(tok)
+            self.stats["generated_tokens"] += 1
+            done = (len(seq.out) >= seq.req.max_new_tokens
+                    or (seq.req.eos_id is not None
+                        and tok == seq.req.eos_id))
+            if done:
+                self._evict(seq, now, finished)
+
+    # -- public loop --------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile every fixed shape this engine can emit (all decode
+        buckets + the fused prefill) against the trash block, so no XLA
+        compile lands mid-serving.  Cache contents are untouched: writes
+        go to block 0 and no sequence state exists yet."""
+        for b in self.cfg.decode_buckets:
+            self._run_model(np.zeros((b, 1), np.int32),
+                            np.zeros((b,), np.int32),
+                            self.kv.table_array([None] * b))
+        rows = self.cfg.prefill_rows
+        self._run_model(np.zeros((rows, self.cfg.prefill_chunk), np.int32),
+                        np.zeros((rows,), np.int32),
+                        self.kv.table_array([None] * rows))
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_waiting or bool(self._live)
+
+    def step(self, now: Optional[float] = None) -> List[RequestResult]:
+        """One engine iteration; returns requests finished this step."""
+        now = time.perf_counter() if now is None else now
+        finished: List[RequestResult] = []
+        plan = self.scheduler.schedule(len(self._live), self.kv)
+        self._prefill(plan, now, finished)
+        # sequences that just produced their first token also decode this
+        # step: prefill ran while the decode batch was below capacity
+        self._decode(now, finished)
+        self.stats["steps"] += 1
+        return finished
+
+    def run(self, requests: Sequence[Request] = (),
+            request_queue: Optional[RequestQueue] = None,
+            max_steps: Optional[int] = None) -> Dict[int, RequestResult]:
+        """Drive until all submitted work (and the queue, if given) is
+        exhausted.  Returns {rid: RequestResult}."""
+        for r in requests:
+            self.submit(r)
+        results: Dict[int, RequestResult] = {}
+        steps = 0
+        while True:
+            if request_queue is not None:
+                for r in request_queue.drain():
+                    self.submit(r)
+            if not self.has_work:
+                if request_queue is None or request_queue.exhausted:
+                    break
+                time.sleep(0.0005)   # idle: wait for producers
+                continue
+            for res in self.step():
+                results[res.rid] = res
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return results

@@ -1,0 +1,112 @@
+"""Paged KV-cache bookkeeping (host side).
+
+The device state — per-layer K/V block pools — lives in the cache pytree
+built by ``Model.init_paged_cache``; this module owns the free-list
+allocator and the per-sequence logical->physical block tables that tell
+``paged_step`` where each sequence's tokens live.  Heterogeneous
+prompt/generation lengths share one preallocated pool instead of each
+request carrying its own ``cache_len`` buffer.
+
+Physical block 0 is never allocated: it is the trash block that inactive
+batch rows point at, so their (masked) writes can't corrupt live data.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+TRASH_BLOCK = 0
+
+
+class BlockAllocator:
+    """LIFO free-list over ``num_blocks`` fixed-size blocks.
+
+    LIFO keeps the pool hot (recently freed blocks are reused first) and
+    makes fragmentation behaviour easy to property-test: any interleaving
+    of alloc/free must conserve ``num_free`` and never hand out block 0
+    or a block twice.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the trash block)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._allocated: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.block_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n blocks, or None (never partial) if the pool can't cover it."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"double/foreign free of block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+
+class PagedKVCache:
+    """Block tables for live sequences + the allocator behind them."""
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 blocks_per_seq: int):
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self.block_size = block_size
+        self.blocks_per_seq = blocks_per_seq
+        self._tables: Dict[int, List[int]] = {}
+
+    def ensure_capacity(self, rid: int, num_tokens: int) -> bool:
+        """Grow sequence ``rid``'s table to cover ``num_tokens`` positions.
+        Returns False (state unchanged) if the pool is exhausted."""
+        need = self.allocator.blocks_for(num_tokens)
+        if need > self.blocks_per_seq:
+            raise ValueError(
+                f"sequence needs {need} blocks > blocks_per_seq="
+                f"{self.blocks_per_seq} (raise engine max_seq_len)")
+        have = self._tables.setdefault(rid, [])
+        grow = need - len(have)
+        if grow <= 0:
+            return True
+        blocks = self.allocator.alloc(grow)
+        if blocks is None:
+            return False
+        have.extend(blocks)
+        return True
+
+    def free_seq(self, rid: int) -> None:
+        blocks = self._tables.pop(rid, None)
+        if blocks:
+            self.allocator.free(blocks)
+
+    def num_blocks_of(self, rid: int) -> int:
+        return len(self._tables.get(rid, ()))
+
+    def table_row(self, rid: Optional[int]) -> np.ndarray:
+        """(blocks_per_seq,) int32 row; unassigned tail (and rows for
+        rid=None, i.e. inactive slots) point at the trash block."""
+        row = np.full((self.blocks_per_seq,), TRASH_BLOCK, np.int32)
+        if rid is not None:
+            blocks = self._tables.get(rid, ())
+            row[:len(blocks)] = blocks
+        return row
+
+    def table_array(self, rids: Sequence[Optional[int]]) -> np.ndarray:
+        """(len(rids), blocks_per_seq) int32 block-table batch."""
+        return np.stack([self.table_row(r) for r in rids])

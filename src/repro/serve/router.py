@@ -1,0 +1,65 @@
+"""Data-parallel replica routing over the LSGD mesh axes.
+
+Serving reuses the training topology's fabric distinction
+(``repro.core.topology.Topology``): one inference replica per
+*fast-fabric* group (the paper's worker group — devices that share the
+cheap intra-node interconnect hold one model copy and batch together),
+while the *slow* axis (``pod``) only separates replicas, exactly like it
+only carries the infrequent phase-2 all-reduce in training.  The router
+is the host-side front door: requests go to the least-loaded replica,
+FCFS on ties, so heavy traffic spreads without any cross-replica
+(slow-fabric) coordination on the hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.core.topology import Topology
+
+
+@dataclass(frozen=True)
+class Replica:
+    replica_id: int
+    pod: int
+    group: int                  # fast-axis group index within the pod
+    devices: Tuple[int, ...]    # fast-axis ranks forming this replica
+
+
+class ReplicaRouter:
+    """Least-loaded routing over the replica grid implied by a Topology."""
+
+    def __init__(self, topology: Topology, num_pods: int, data_size: int):
+        groups = topology.phase1_groups(data_size)
+        if groups is None:
+            groups = [list(range(data_size))]
+        self.replicas: List[Replica] = []
+        for pod in range(num_pods):
+            for gi, g in enumerate(groups):
+                self.replicas.append(Replica(
+                    replica_id=len(self.replicas), pod=pod, group=gi,
+                    devices=tuple(g)))
+        self._load: Dict[int, int] = {r.replica_id: 0 for r in self.replicas}
+        self._assignment: Dict[int, int] = {}   # request rid -> replica_id
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.replicas)
+
+    def route(self, rid: int) -> Replica:
+        """Assign request ``rid`` to the least-loaded replica (lowest id
+        on ties, so placement is deterministic)."""
+        if rid in self._assignment:
+            return self.replicas[self._assignment[rid]]
+        best = min(self.replicas,
+                   key=lambda r: (self._load[r.replica_id], r.replica_id))
+        self._assignment[rid] = best.replica_id
+        self._load[best.replica_id] += 1
+        return best
+
+    def complete(self, rid: int) -> None:
+        replica_id = self._assignment.pop(rid)
+        self._load[replica_id] -= 1
+
+    def loads(self) -> Dict[int, int]:
+        return dict(self._load)

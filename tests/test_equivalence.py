@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade to skips, not a crash
 from hypothesis import given, settings, strategies as st
 
 from conftest import tree_max_diff

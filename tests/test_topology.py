@@ -2,6 +2,7 @@
 axis exactly and compose to the global mean."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade to skips, not a crash
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import Topology
