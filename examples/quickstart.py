@@ -15,6 +15,7 @@ from repro.core import (TrainerConfig, Topology, make_finalize,
                         make_init_state, make_shardmap_step, virtual)
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.models.model import build_model
+from repro.launch.mesh import make_mesh
 from repro.optim.sgd import OptimConfig
 from repro.optim import schedules
 
@@ -52,8 +53,7 @@ def main():
 
     print("\n== distributed LSGD trainer (shard_map, explicit two-phase "
           "collectives) ==")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     tcfg = TrainerConfig(sync_mode="lsgd", optim=ocfg, topology=Topology())
     state = make_init_state(model, tcfg)(jax.random.key(0))
     step = jax.jit(make_shardmap_step(model, tcfg, lr_fn, mesh))

@@ -25,6 +25,7 @@ from typing import Any, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import sharding
 from repro.core.topology import Topology
 
 
@@ -86,7 +87,7 @@ def layered_rsag_sync(grads, topo: Topology, mesh_axis_names, manual,
                 g = jax.lax.pmean(g, fast, axis_index_groups=p2)
         if slow:
             orig_shape = g.shape
-            n = jax.lax.axis_size(slow)
+            n = sharding.axis_size(slow)
             flat = g.reshape(-1)
             pad = (-flat.size) % n
             if pad:

@@ -66,13 +66,16 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                     / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, scale, block_size, n_blocks,
-                  kv_heads, group, window):
+                  kv_heads, group, chunk, window):
     """Per-(batch, logical-block) step over a paged pool.  The BlockSpec
     index_map already routed k_ref/v_ref to physical block
-    block_tables[b, i] via scalar prefetch; here only the masking differs
-    from the contiguous kernel: validity is per-sequence length."""
+    block_tables[b, i] via scalar prefetch.  Each row carries ``chunk``
+    query tokens at positions pos[b]..pos[b]+chunk-1 (chunk=1 for batched
+    decode, >1 for a prefill chunk); masking is causal per query position,
+    which also hides every unwritten pool slot (their kpos exceeds the
+    frontier)."""
     b, i = pl.program_id(0), pl.program_id(1)
 
     @pl.when(i == 0)
@@ -81,22 +84,28 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    h, hd = q_ref.shape[1], q_ref.shape[2]
-    q = q_ref[0].astype(jnp.float32).reshape(kv_heads, group, hd)
+    h, hd = q_ref.shape[2], q_ref.shape[3]
+    # (C,H,hd) -> (KV, C*G, hd): fold the chunk into the per-kv-head
+    # query group so the MXU sees one batched (KV, C*G, bs) dot
+    q = (q_ref[0].astype(jnp.float32)
+         .reshape(chunk, kv_heads, group, hd)
+         .swapaxes(0, 1)
+         .reshape(kv_heads, chunk * group, hd))
     kt = jnp.swapaxes(k_ref[0].astype(jnp.float32), 0, 1)   # (KV, bs, hd)
     vt = jnp.swapaxes(v_ref[0].astype(jnp.float32), 0, 1)
 
     logits = jax.lax.dot_general(
         q, kt, (((2,), (2,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32) * scale          # (KV, G, bs)
-    length = len_ref[b]
+        preferred_element_type=jnp.float32) * scale        # (KV, C*G, bs)
     kpos = i * block_size + jax.lax.broadcasted_iota(jnp.int32,
                                                      logits.shape, 2)
-    valid = kpos < length
+    qpos = pos_ref[b] + jax.lax.broadcasted_iota(jnp.int32,
+                                                 logits.shape, 1) // group
+    valid = kpos <= qpos
     if window:
-        valid &= kpos >= length - window
+        valid &= kpos > qpos - window
     logits = jnp.where(valid, logits, NEG_INF)
-    logits = logits.reshape(h, logits.shape[-1])             # (H, bs)
+    logits = logits.reshape(chunk * h, logits.shape[-1])   # (C*H, bs)
 
     m_prev, l_prev = m_scr[...], l_scr[...]
     m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
@@ -104,33 +113,37 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     p = jnp.exp(logits - m_new)
     l_scr[...] = l_prev * alpha + p.sum(-1, keepdims=True)
     pv = jax.lax.dot_general(
-        p.reshape(kv_heads, group, -1), vt,
+        p.reshape(kv_heads, chunk * group, -1), vt,
         (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)                  # (KV, G, hd)
-    acc_scr[...] = acc_scr[...] * alpha + pv.reshape(h, hd)
+        preferred_element_type=jnp.float32)                # (KV, C*G, hd)
+    acc_scr[...] = acc_scr[...] * alpha + pv.reshape(chunk * h, hd)
     m_scr[...] = m_new
 
     @pl.when(i == n_blocks - 1)
     def _fin():
-        o_ref[0] = (acc_scr[...]
-                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)  # (C*H, hd)
+        o_ref[0] = (o.reshape(kv_heads, chunk, group, hd)
+                    .swapaxes(0, 1)
+                    .reshape(chunk, h, hd)).astype(o_ref.dtype)
 
 
-def flash_decode_paged_bhd(q, k_pool, v_pool, block_tables, lengths, *,
+def flash_decode_paged_bhd(q, k_pool, v_pool, block_tables, pos, *,
                            window=0, interpret=True):
-    """Paged decode attention (the repro.serve hot loop).
+    """Paged decode/prefill-chunk attention (the repro.serve hot loop).
 
-    q (B,H,hd); k_pool,v_pool (nb, bs, KV, hd) — shared physical block
-    pools; block_tables (B, NB) int32 maps each sequence's logical block i
-    to a physical block; lengths (B,) int32 = #valid tokens per sequence.
-    hd % 128 == 0.  Returns (B,H,hd).
+    q (B,C,H,hd) — C query tokens per row (C=1 batched decode, C>1 a
+    prefill chunk); k_pool,v_pool (nb, bs, KV, hd) — shared physical
+    block pools, already containing this call's new tokens; block_tables
+    (B, NB) int32 maps each sequence's logical block i to a physical
+    block; pos (B,) int32 absolute position of each row's first query.
+    hd % 128 == 0.  Returns (B,C,H,hd).
 
     Grid (B, NB) with the logical-block axis innermost/sequential; the
     block tables ride in scalar prefetch so the k/v BlockSpec index_map
     can DMA exactly the physical block each step needs.
     """
     from jax.experimental.pallas import tpu as pltpu
-    b, h, hd = q.shape
+    b, c, h, hd = q.shape
     bs, kvh = k_pool.shape[1], k_pool.shape[2]
     nb_seq = block_tables.shape[1]
     group = h // kvh
@@ -138,28 +151,29 @@ def flash_decode_paged_bhd(q, k_pool, v_pool, block_tables, lengths, *,
 
     kernel = functools.partial(
         _paged_kernel, scale=scale, block_size=bs, n_blocks=nb_seq,
-        kv_heads=kvh, group=group, window=window)
+        kv_heads=kvh, group=group, chunk=c, window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nb_seq),
         in_specs=[
-            pl.BlockSpec((1, h, hd), lambda bi, ki, bt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, c, h, hd), lambda bi, ki, bt, ps: (bi, 0, 0, 0)),
             pl.BlockSpec((1, bs, kvh, hd),
-                         lambda bi, ki, bt, ln: (bt[bi, ki], 0, 0, 0)),
+                         lambda bi, ki, bt, ps: (bt[bi, ki], 0, 0, 0)),
             pl.BlockSpec((1, bs, kvh, hd),
-                         lambda bi, ki, bt, ln: (bt[bi, ki], 0, 0, 0)),
+                         lambda bi, ki, bt, ps: (bt[bi, ki], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, h, hd), lambda bi, ki, bt, ln: (bi, 0, 0)),
-        scratch_shapes=[_scratch((h, 1)), _scratch((h, 1)),
-                        _scratch((h, hd))],
+        out_specs=pl.BlockSpec((1, c, h, hd),
+                               lambda bi, ki, bt, ps: (bi, 0, 0, 0)),
+        scratch_shapes=[_scratch((c * h, 1)), _scratch((c * h, 1)),
+                        _scratch((c * h, hd))],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, hd), q.dtype),
         interpret=interpret,
     )(jnp.asarray(block_tables, jnp.int32),
-      jnp.asarray(lengths, jnp.int32).reshape(b), q, k_pool, v_pool)
+      jnp.asarray(pos, jnp.int32).reshape(b), q, k_pool, v_pool)
 
 
 def flash_decode_bhd(q, k, v, length, *, block_kv=512, interpret=True):

@@ -122,24 +122,26 @@ def flash_decode(q, k, v, length, *, block_kv: int = 512) -> jax.Array:
     return o[..., :hd]
 
 
-def flash_decode_paged(q, k_pool, v_pool, block_tables, lengths, *,
+def flash_decode_paged(q, k_pool, v_pool, block_tables, pos, *,
                        window: int = 0) -> jax.Array:
-    """Paged decode attention for repro.serve: q (B,H,hd); pools
-    (nb, bs, KV, hd); block_tables (B,NB); lengths (B,) -> (B,H,hd).
+    """Paged decode/prefill-chunk attention for repro.serve:
+    q (B,C,H,hd) — C query tokens per row; pools (nb, bs, KV, hd);
+    block_tables (B,NB); pos (B,) absolute position of each row's first
+    query -> (B,C,H,hd).
 
     When hd % 128 != 0 this pads the ENTIRE pools on every call — fine
     for the interpret-mode correctness sweeps this wrapper serves today,
     but O(pool) per layer per step.  A production TPU caller should
     allocate its pools at a 128-aligned head_dim and hit the zero-pad
     fast path here."""
-    b, h, hd = q.shape
+    b, c, h, hd = q.shape
     hd_pad = (-hd) % 128
     qp = _pad_heads(q, hd_pad)
     kp = _pad_heads(k_pool, hd_pad)
     vp = _pad_heads(v_pool, hd_pad)
     if hd_pad:
         qp = qp * ((hd + hd_pad) ** 0.5 / hd ** 0.5)
-    o = _fd.flash_decode_paged_bhd(qp, kp, vp, block_tables, lengths,
+    o = _fd.flash_decode_paged_bhd(qp, kp, vp, block_tables, pos,
                                    window=window, interpret=_INTERPRET)
     return o[..., :hd]
 

@@ -60,30 +60,33 @@ def flash_decode(q, k, v, length):
     return o.reshape(b, h, hd).astype(q.dtype)
 
 
-def flash_decode_paged(q, k_pool, v_pool, block_tables, lengths, *,
+def flash_decode_paged(q, k_pool, v_pool, block_tables, pos, *,
                        window=0):
-    """Oracle for the paged decode kernel: q (B,H,hd); pools
-    (nb,bs,KV,hd); block_tables (B,NB); lengths (B,).  Gathers each
-    sequence's blocks into a contiguous (B, NB*bs, KV, hd) view and runs
-    exact masked attention."""
-    b, h, hd = q.shape
+    """Oracle for the paged decode kernel: q (B,C,H,hd) — C query tokens
+    per row; pools (nb,bs,KV,hd); block_tables (B,NB); pos (B,) position
+    of each row's first query.  Gathers each sequence's blocks into a
+    contiguous (B, NB*bs, KV, hd) view and runs exact per-query-position
+    masked attention."""
+    b, c, h, hd = q.shape
     bs, kvh = k_pool.shape[1], k_pool.shape[2]
     nb_seq = block_tables.shape[1]
     g = h // kvh
     scale = 1.0 / math.sqrt(hd)
     k = k_pool[block_tables].reshape(b, nb_seq * bs, kvh, hd)
     v = v_pool[block_tables].reshape(b, nb_seq * bs, kvh, hd)
-    qg = q.reshape(b, kvh, g, hd).astype(jnp.float32)
-    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32)) * scale
-    kpos = jnp.arange(nb_seq * bs)[None]
-    ln = jnp.asarray(lengths).reshape(-1, 1)
-    valid = kpos < ln
+    qg = q.reshape(b, c, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bckgh,bskh->bckgs", qg,
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(nb_seq * bs)[None, None]                  # (1,1,S)
+    qpos = (jnp.asarray(pos).reshape(-1, 1)
+            + jnp.arange(c)[None])[..., None]                   # (B,C,1)
+    valid = kpos <= qpos
     if window:
-        valid &= kpos >= ln - window
-    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+        valid &= kpos > qpos - window
+    logits = jnp.where(valid[:, :, None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
-    return o.reshape(b, h, hd).astype(q.dtype)
+    o = jnp.einsum("bckgs,bskh->bckgh", p, v.astype(jnp.float32))
+    return o.reshape(b, c, h, hd).astype(q.dtype)
 
 
 def ssd_chunk_bchp(x, dt, dacum, B, C):

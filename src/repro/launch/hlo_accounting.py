@@ -125,12 +125,16 @@ _OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)*)\)")
 
 
 def _operand_names(line: str) -> List[str]:
-    # operands of the op: first (...) group after the op name
+    # operands of the op: first (...) group after the op name.  Depending
+    # on the XLA version the printer emits either bare references
+    # (``dot(%a, %b)``) or shape-annotated ones
+    # (``dot(f32[4,64,32]{2,1,0} %a, f32[4,32,16]{2,1,0} %b)``), so pull
+    # the %names out of the group instead of splitting on commas (shape
+    # dims contain commas too).
     m = re.search(r"[a-z][a-z0-9\-]*\(([^)]*)\)", line[line.index("= ") + 1:])
     if not m:
         return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",")
-            if t.strip().startswith("%")]
+    return re.findall(r"%([\w\.\-]+)", m.group(1))
 
 
 def _dot_flops(ins: Instr, comp: Computation) -> float:

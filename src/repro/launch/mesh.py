@@ -19,17 +19,31 @@ ICI_BW = 50e9                     # bytes/s per link (intra-pod)
 DCI_BW = 6.25e9                   # bytes/s per chip (inter-pod, ~25GB/s/host)
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions.
+
+    JAX >= 0.5 meshes default every axis to Explicit typing unless
+    ``axis_types`` says otherwise; this codebase wants Auto everywhere.
+    JAX 0.4.x has neither ``jax.sharding.AxisType`` nor the
+    ``axis_types`` kwarg (Auto is the only behaviour), so feature-detect
+    and omit the argument there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Small mesh for CPU-device tests (requires forced device count)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_axis_sizes(mesh) -> dict:

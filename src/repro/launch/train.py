@@ -26,6 +26,7 @@ from repro.core import (TrainerConfig, Topology, make_finalize,
                         make_init_state, make_shardmap_step)
 from repro.data.pipeline import DataConfig, HostLoader, data_config_for
 from repro.launch import builders
+from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
 from repro.optim.sgd import OptimConfig
 from repro.optim import schedules
@@ -79,12 +80,9 @@ def main(argv=None):
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
         axes = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(dims, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(dims))
+        mesh = make_mesh(dims, axes)
     else:
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
 
     # lr schedule — the paper's linear scaling rule, applied only upward
     # (the rule calibrates growth beyond the base batch of 256; tiny CPU

@@ -226,8 +226,8 @@ def _qkv(params, x, kv_x, cfg, num_heads, num_kv):
 
 def apply_attention(params, x, cfg, *, positions=None, causal=True,
                     window=0, use_rope=True, cache=None, pos=None,
-                    kv_x=None, cross=False, num_heads=None, num_kv_heads=None,
-                    make_cache=False, cache_len=0):
+                    valid_len=None, kv_x=None, cross=False, num_heads=None,
+                    num_kv_heads=None, make_cache=False, cache_len=0):
     """Returns (y, new_cache).
 
     Full-sequence mode (cache is None, x: (B,S,D)):
@@ -301,31 +301,37 @@ def apply_attention(params, x, cfg, *, positions=None, causal=True,
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
         # scatter the C new k/v rows into each sequence's blocks; logical
-        # block i of sequence b lives at physical block bt[b, i].  Padded
-        # tail positions of a fixed-shape chunk can run past the table —
-        # those writes go to the trash block (physical 0), NEVER clamped
-        # onto the sequence's last real block (that would clobber live
-        # cache a later query still attends to).
+        # block i of sequence b lives at physical block bt[b, i].  Two
+        # kinds of padding must land in the trash block (physical 0),
+        # NEVER clamped onto a real block (that would clobber live cache
+        # a later query still attends to):
+        #   * tail positions of a fixed-shape chunk that run past the
+        #     block table;
+        #   * columns >= the row's valid_len (a decode row in a fused
+        #     mixed prefill+decode call carries C-1 padding columns whose
+        #     positions land INSIDE the sequence's own table — without
+        #     the per-row valid-length mask they'd overwrite live KV).
         lblk = positions // bs_blk
-        in_range = lblk < bt.shape[1]
+        writable = lblk < bt.shape[1]
+        if valid_len is not None:
+            writable &= jnp.arange(c)[None] < valid_len[:, None]
         blk = jnp.take_along_axis(bt, jnp.minimum(lblk, bt.shape[1] - 1),
                                   axis=1)                       # (B,C)
-        blk = jnp.where(in_range, blk, 0)
+        blk = jnp.where(writable, blk, 0)
         slot = positions % bs_blk
         kpool = kpool.at[blk, slot].set(k.astype(kpool.dtype))
         vpool = vpool.at[blk, slot].set(v.astype(vpool.dtype))
-        qg = _group(q, kv)
-        if cfg.attn_impl == "pallas" and c == 1:
+        if cfg.attn_impl == "pallas":
             from repro.kernels import ops as kops
-            o = kops.flash_decode_paged(q[:, 0], kpool, vpool, bt,
-                                        pos + 1, window=window)
-            o = o[:, None]
-            o = _group(o, kv)
+            o = kops.flash_decode_paged(q, kpool, vpool, bt, pos,
+                                        window=window)
+            o = o.reshape(b, c, kv, h // kv, cfg.head_dim)
         else:
             nb_seq = bt.shape[1]
             kc = kpool[bt].reshape(b, nb_seq * bs_blk, kv, cfg.head_dim)
             vc = vpool[bt].reshape(b, nb_seq * bs_blk, kv, cfg.head_dim)
-            o = paged_decode_attention(qg, kc, vc, positions, window=window)
+            o = paged_decode_attention(_group(q, kv), kc, vc, positions,
+                                       window=window)
         y = o.reshape(b, c, h * cfg.head_dim)
         y = jnp.einsum("bsk,kd->bsd", y, params["wo"].astype(dt))
         return y, {"k": kpool, "v": vpool, "block_tables": bt}

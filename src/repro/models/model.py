@@ -14,12 +14,18 @@ Decoder-only LMs additionally expose the paged-KV serving interface used
 by ``repro.serve`` (continuous batching over a shared block pool):
 
   init_paged_cache(num_blocks, block_size, batch, blocks_per_seq)
-  paged_step(params, cache, tokens, pos)  # tokens (B,C), pos (B,)
+  paged_step(params, cache, slot_buf, tokens, block_tables, meta)
+      # ONE fused call per engine step: mixed prefill+decode rows
+      # (tokens (B,C); meta (4,B) packs pos/valid_len/src_slot/dst_slot),
+      # greedy argmax sampled on device, frontier logits sliced on
+      # device; slot_buf wires step k's sampled tokens into step k+1
+      # without a host round-trip.  Returns (next_tokens (B,),
+      # logits (B,V), slot_buf, cache).
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -43,6 +49,11 @@ class Model:
     # paged-KV serving interface (None for families without a paged form)
     init_paged_cache: Optional[Callable] = None
     paged_step: Optional[Callable] = None
+    paged_step_logits: Optional[Callable] = None  # unfused PR-1 baseline
+    # shared jax.jit wrappers keyed by (name, donate): every Engine over
+    # this model reuses the same compiled executables instead of paying
+    # XLA compilation per instance
+    jit_cache: Dict[Any, Callable] = field(default_factory=dict)
 
     def abstract_params(self):
         return jax.eval_shape(self.init, jax.random.key(0))
@@ -109,7 +120,10 @@ def build_model(cfg: ModelConfig) -> Model:
         init_paged_cache=(functools.partial(transformer.init_paged_cache, cfg)
                           if paged_ok else None),
         paged_step=(functools.partial(transformer.paged_step, cfg=cfg)
-                    if paged_ok else None))
+                    if paged_ok else None),
+        paged_step_logits=(
+            functools.partial(transformer.paged_step_logits, cfg=cfg)
+            if paged_ok else None))
 
 
 # ---------------------------------------------------------------------------

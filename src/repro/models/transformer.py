@@ -86,7 +86,7 @@ def _layer_window(cfg, kind: str) -> int:
 
 
 def apply_layer(p, h, cfg, kind: str, ffn: str, *, positions, cache=None,
-                pos=None, make_cache=False, cache_len=0):
+                pos=None, valid_len=None, make_cache=False, cache_len=0):
     aux = jnp.zeros((), jnp.float32)
     x = apply_norm(p["ln1"], h, cfg)
     if kind in ("attn", "local_attn"):
@@ -99,7 +99,8 @@ def apply_layer(p, h, cfg, kind: str, ffn: str, *, positions, cache=None,
         else:
             y, c = attn_mod.apply_attention(
                 p["attn"], x, cfg, positions=positions, window=window,
-                cache=cache, pos=pos, make_cache=make_cache,
+                cache=cache, pos=pos, valid_len=valid_len,
+                make_cache=make_cache,
                 cache_len=min(cache_len, window) if window else cache_len)
     elif kind == "ssm":
         y, c = ssm_mod.apply_ssm(p["ssm"], x, cfg, cache=cache,
@@ -150,7 +151,7 @@ def init_run(key, cfg, kind: str, ffn: str, n: int):
 
 
 def apply_run(rp, h, cfg, kind: str, ffn: str, *, positions, cache=None,
-              pos=None, make_cache=False, cache_len=0):
+              pos=None, valid_len=None, make_cache=False, cache_len=0):
     """Scan h through a stacked run.  cache (if given) has leading L axis."""
     use_cache = cache is not None
 
@@ -161,7 +162,8 @@ def apply_run(rp, h, cfg, kind: str, ffn: str, *, positions, cache=None,
             lp, lc = xs, None
         hh, c, aux = apply_layer(lp, carry, cfg, kind, ffn,
                                  positions=positions, cache=lc, pos=pos,
-                                 make_cache=make_cache, cache_len=cache_len)
+                                 valid_len=valid_len, make_cache=make_cache,
+                                 cache_len=cache_len)
         if c is None:
             c = jnp.zeros((), h.dtype)  # scan needs a concrete ys
         return hh, (c, aux)
@@ -252,8 +254,8 @@ def chunked_lm_ce(params, h, labels, cfg, *, mask_from: int = 0):
     return tot / jnp.maximum(cnt, 1.0)
 
 
-def forward(params, batch, cfg, *, cache=None, pos=None, make_cache=False,
-            cache_len=0, need_logits=True):
+def forward(params, batch, cfg, *, cache=None, pos=None, valid_len=None,
+            make_cache=False, cache_len=0, need_logits=True):
     """Returns (logits, new_cache, aux_loss).
 
     batch: {"tokens": (B,S)} (+ "image_embeds": (B,Si,D) for vlm).
@@ -282,8 +284,8 @@ def forward(params, batch, cfg, *, cache=None, pos=None, make_cache=False,
         rp = params["layers"][f"run_{i}"]
         rc = cache[f"run_{i}"] if cache is not None else None
         h, nc, a = apply_run(rp, h, cfg, kind, ffn, positions=positions,
-                             cache=rc, pos=pos, make_cache=make_cache,
-                             cache_len=cache_len)
+                             cache=rc, pos=pos, valid_len=valid_len,
+                             make_cache=make_cache, cache_len=cache_len)
         if new_cache is not None:
             new_cache[f"run_{i}"] = nc
         aux = aux + a
@@ -332,17 +334,66 @@ def with_block_tables(cache, block_tables):
     return out
 
 
-def paged_step(params, cache, tokens, pos, cfg):
-    """Unified continuous-batching step over a paged cache.
-
-    tokens: (B, C) int32 — C=1 for batched decode, C=chunk for a prefill
-    chunk; pos: (B,) int32 absolute position of each row's first token.
-    Returns (logits (B, C, V), cache) — caller samples from the logit at
-    its own frontier.
-    """
+def paged_step_logits(params, cache, tokens, pos, cfg):
+    """Unfused step over a paged cache (the PR-1 engine's inner loop,
+    kept as the measurable baseline): full (B, C, V) logits ship to host
+    and the host samples.  tokens (B, C) int32; pos (B,) int32."""
     logits, new_cache, _, _ = forward(params, {"tokens": tokens}, cfg,
                                       cache=cache, pos=pos)
     return logits, new_cache
+
+
+def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg):
+    """Fused continuous-batching step over a paged cache: mixed
+    prefill+decode rows, device-side greedy sampling, and on-device
+    last-token logit slicing.
+
+    tokens: (B, C) int32 — decode rows use only column 0, prefill rows
+    carry a prompt chunk; block_tables: (B, NB) int32 per-row block
+    tables (broadcast across layers inside the jit — cheaper than the
+    host materializing the broadcast every step); meta: (4, B) int32
+    packed per-row control inputs (one host->device transfer instead of
+    four):
+
+      meta[0] = pos       absolute position of the row's first token
+      meta[1] = valid_len number of real tokens in the row (0 disables
+                          the row: every KV write goes to the trash
+                          block, so a padded/stale row cannot clobber
+                          live cache)
+      meta[2] = src_slot  rows with src_slot >= 0 read their input
+                          token from slot_buf[src_slot] instead of
+                          tokens[:, 0]
+      meta[3] = dst_slot  slot the sampled token is scattered to
+                          (dst_slot < 0 routes to the spare slot S)
+
+    slot_buf: (S+1,) int32 device-resident last-sampled-token-per-slot
+    ring — the device-side feedback path that lets the host dispatch
+    step k+1 before fetching step k's tokens.
+
+    Returns (next_tokens (B,), frontier logits (B, V) f32, slot_buf,
+    cache).  Only the (B,)/(B,V) outputs ever ship to host — the
+    (B, C, V) prefill logits block never leaves the device.
+    """
+    pos, valid_len, src_slot, dst_slot = meta
+    cache = with_block_tables(cache, block_tables)
+    wired = src_slot >= 0
+    tok0 = jnp.where(wired, slot_buf[jnp.maximum(src_slot, 0)],
+                     tokens[:, 0])
+    tokens = tokens.at[:, 0].set(tok0.astype(tokens.dtype))
+    _, new_cache, _, h = forward(params, {"tokens": tokens}, cfg,
+                                 cache=cache, pos=pos, valid_len=valid_len,
+                                 need_logits=False)
+    # slice each row's frontier hidden state on device: logits are only
+    # ever needed at the last real token (first generated token for a
+    # prompt-completing prefill row, next token for a decode row)
+    idx = jnp.maximum(valid_len - 1, 0)
+    hf = jnp.take_along_axis(h, idx[:, None, None], axis=1)    # (B,1,D)
+    logits = _logits(params, hf, cfg)[:, 0].astype(jnp.float32)
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    spare = slot_buf.shape[0] - 1
+    dst = jnp.where(dst_slot >= 0, dst_slot, spare)
+    slot_buf = slot_buf.at[dst].set(toks)
+    return toks, logits, slot_buf, new_cache
 
 
 def init_cache(cfg, batch: int, cache_len: int, dtype=None):

@@ -1,7 +1,8 @@
 """repro.serve — continuous-batching inference on top of the paged-KV
 model interface (Model.init_paged_cache / Model.paged_step).
 
-  engine.Engine        admission -> chunked prefill -> batched decode loop
+  engine.Engine        one fused mixed prefill+decode call per step,
+                       device-side greedy sampling, pipelined dispatch
   kv_cache             block pool allocator + per-sequence block tables
   scheduler            FCFS policy with a prefill-token budget; RequestQueue
   router               data-parallel replica placement over Topology axes

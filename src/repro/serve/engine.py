@@ -1,27 +1,43 @@
 """Continuous-batching inference engine over a paged KV cache.
 
-Each ``step()`` is one engine iteration:
+Each ``step()`` is ONE fused fixed-shape ``paged_step`` call carrying
+mixed prefill+decode rows:
 
-  1. drain newly arrived requests (via ``run()``'s RequestQueue),
-  2. run the scheduler's budgeted prefill work as ONE fused fixed-shape
-     (prefill_rows, prefill_chunk) call — rows carry different sequences
-     at different positions, which the paged cache makes free,
-  3. run ONE batched (max_batch, 1) decode step for every ready
-     sequence, then evict finished sequences and free their blocks.
+  * the row layout adapts to the step: decode-only steps use the plain
+    (bucket, 1) shape, prefill-only steps use chunk-wide rows, and
+    mixed steps split prefill chunks into one width-1 row per prompt
+    token (later chunk tokens attend their siblings' KV because every
+    row's scatter lands before any row's gather inside the call) so
+    the step costs exactly the token-positions of the legacy two-call
+    layout instead of padding decode rows to the chunk width; a
+    per-row ``valid_len`` input routes padded/inactive rows' KV writes
+    to the trash block, so a stale row can never clobber a live
+    sequence's blocks;
+  * greedy argmax sampling happens on device inside the call, and only
+    each row's frontier logits are sliced out — the host never sees a
+    ``(rows, chunk, vocab)`` logits block;
+  * a device-resident per-slot token buffer feeds step k's sampled
+    tokens into step k+1's decode rows without a host round-trip, so
+    the host can dispatch step k+1 BEFORE fetching step k's tokens
+    (depth-1 pipelined dispatch — the serving analogue of LSGD hiding
+    the slow collective under the next minibatch's compute).  When a
+    live request carries an ``eos_id`` (or sampling is stochastic) the
+    engine falls back to synchronous fetches, since stopping then
+    depends on token *values* the host must observe.
 
 Because block tables, positions, and tokens are rebuilt for every call,
-decode rows carry no state between steps — a sequence's identity lives
-entirely in its block table.  Admission therefore isn't tied to a decode
-row: the engine admits ``admission_lookahead`` sequences beyond
-max_batch so a freshly finished row is backfilled by an already-prefilled
-("ready") sequence with zero idle steps — the serving analogue of LSGD
-prefetching the next minibatch under the collective.
+rows carry no state between steps — a sequence's identity lives in its
+block table and its slot in the device token buffer.  Admission isn't
+tied to a decode row: the engine admits ``admission_lookahead``
+sequences beyond max_batch so a freshly finished row is backfilled by an
+already-prefilled ("ready") sequence with zero idle steps.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,17 +59,41 @@ class EngineConfig:
     admission_lookahead: int = 2    # prompts prefilled ahead of a free row
     temperature: float = 0.0        # 0 => greedy
     seed: int = 0
+    fused: bool = True              # False: PR-1 two-call loop (baseline)
+    pipeline: bool = True           # overlap host bookkeeping with device
+    donate: bool = True             # alias cache/slot buffers across steps
 
     @property
     def blocks_per_seq(self) -> int:
         return -(-self.max_seq_len // self.block_size)
 
     @property
+    def num_slots(self) -> int:
+        """Device token-buffer slots: one per admittable sequence."""
+        return self.max_batch + self.admission_lookahead
+
+    @property
     def prefill_rows(self) -> int:
-        """Rows in the fused prefill call — enough for a full budget of
+        """Prefill rows in the chunk-wide prefill-only call (also the
+        legacy unfused prefill call) — enough for a full budget of
         max-size chunks (the scheduler grants no more per step)."""
         return max(1, min(self.max_batch,
                           self.prefill_token_budget // self.prefill_chunk))
+
+    @property
+    def mixed_buckets(self) -> List[int]:
+        """Row counts for fused steps that carry BOTH decode rows and
+        prefill work.  Prefill chunks are split into width-1 rows (one
+        row per prompt token, all in the same call — later tokens attend
+        siblings' KV written earlier in the call), so a mixed step costs
+        exactly the same token-positions as the unfused
+        prefill-call-plus-decode-call layout instead of padding every
+        decode row to the chunk width."""
+        full = self.max_batch + self.prefill_token_budget
+        half = self.max_batch + max(self.prefill_chunk,
+                                    self.prefill_token_budget // 2)
+        small = self.max_batch + self.prefill_chunk
+        return sorted({full, half, small})
 
     @property
     def decode_buckets(self) -> List[int]:
@@ -82,15 +122,27 @@ class RequestResult:
 @dataclass(eq=False)        # identity equality (held in ordered lists)
 class _Seq:
     req: Request
-    out: List[int] = field(default_factory=list)
+    slot: int
+    out: List[int] = field(default_factory=list)  # host-materialized tokens
+    gen_count: int = 0      # generated incl. in-flight (out lags by pending)
     first_token_time: float = 0.0
     prefill_done: bool = False
+    done: bool = False      # finished by count; awaiting final fetch/evict
 
     @property
     def next_pos(self) -> int:
         """Position of the next token fed to decode (the last sampled
         token goes in at prompt_len + generated-so-far - 1)."""
-        return len(self.req.prompt) + len(self.out) - 1
+        return len(self.req.prompt) + self.gen_count - 1
+
+
+@dataclass
+class _Inflight:
+    """One dispatched step whose token values the host hasn't read yet."""
+    toks: jax.Array                       # (rows,) int32, device
+    logits: jax.Array                     # (rows, V) f32, device
+    emits: List[Tuple[int, "_Seq", bool]]  # (row, seq, is_first_token)
+    now: float
 
 
 class Engine:
@@ -112,15 +164,39 @@ class Engine:
         self.cache = model.init_paged_cache(
             cfg.num_blocks, cfg.block_size, cfg.max_batch,
             cfg.blocks_per_seq)
-        self._step_fn = jax.jit(model.paged_step, donate_argnums=(1,))
+        # cache + slot buffer are pure device state threaded through every
+        # call; donating them lets XLA scatter into the KV pools in place
+        # instead of copying the pools every step.  Note for the
+        # pipelined mode: on the CPU PJRT runtime a call with donated
+        # inputs blocks *dispatch* until the producer of those buffers
+        # finishes — that block lands where the data dependency would
+        # have stalled the device anyway, and the host has already built
+        # this step's inputs by then, so donation keeps both the overlap
+        # and the zero-copy update.  cfg.donate=False exists for
+        # backends/benchmarks where the aliasing stall does matter.
+        donate = (1, 2) if cfg.donate else ()
+        # jit wrappers are shared across Engine instances through the
+        # model (same compiled executables; a fresh Engine costs no
+        # recompilation)
+        self._step_fn = model.jit_cache.setdefault(
+            ("paged_step", donate),
+            jax.jit(model.paged_step, donate_argnums=donate))
+        self._legacy_fn = (model.jit_cache.setdefault(
+            ("paged_step_logits", (1,)),
+            jax.jit(model.paged_step_logits, donate_argnums=(1,)))
+            if not cfg.fused else None)
+        self._slot_buf = jnp.zeros((cfg.num_slots + 1,), jnp.int32)
+        self._free_slots: List[int] = list(range(cfg.num_slots - 1, -1, -1))
         self._live: List[_Seq] = []     # admission (FCFS) order
+        self._pending: Deque[_Inflight] = deque()
         self._rng = np.random.default_rng(cfg.seed)
         self._preempt_counts: Dict[int, int] = {}
         self._first_token_times: Dict[int, float] = {}
         # telemetry for the bench report
         self.stats = {"steps": 0, "decode_steps": 0, "decode_slot_steps": 0,
                       "decode_active_slot_steps": 0, "prefill_tokens": 0,
-                      "generated_tokens": 0, "preemptions": 0}
+                      "generated_tokens": 0, "preemptions": 0,
+                      "model_calls": 0, "host_syncs": 0}
 
     # -- submission ---------------------------------------------------------
 
@@ -149,59 +225,15 @@ class Engine:
                 return s
         return None
 
-    def _run_model(self, tokens: np.ndarray, pos: np.ndarray,
-                   tables: np.ndarray):
-        cache = transformer.with_block_tables(self.cache,
-                                              jnp.asarray(tables))
-        logits, self.cache = self._step_fn(
-            self.params, cache, jnp.asarray(tokens), jnp.asarray(pos))
-        return np.asarray(jax.device_get(logits), np.float32)
-
-    def _prefill(self, chunks, now: float,
-                 finished: List[RequestResult]) -> None:
-        """All of this step's prefill chunks ride ONE fixed-shape
-        (prefill_rows, prefill_chunk) call: rows carry different sequences
-        at different positions — per-row pos + block tables make that free
-        under the paged cache (unused rows write into the trash block).
-        The scheduler grants <= prefill_rows chunks per step."""
-        if not chunks:
-            return
-        b, c = self.cfg.prefill_rows, self.cfg.prefill_chunk
-        assert len(chunks) <= b
-        tokens = np.zeros((b, c), np.int32)
-        pos = np.zeros((b,), np.int32)
-        rids: List[Optional[int]] = [None] * b
-        for row, ch in enumerate(chunks):
-            tokens[row, :ch.length] = \
-                ch.req.prompt[ch.start:ch.start + ch.length]
-            pos[row] = ch.start
-            rids[row] = ch.req.rid
-            if self._seq_of(ch.req.rid) is None:     # fresh admission
-                self._live.append(_Seq(ch.req))
-        logits = self._run_model(tokens, pos, self.kv.table_array(rids))
-        for row, ch in enumerate(chunks):
-            self.stats["prefill_tokens"] += ch.length
-            if ch.start + ch.length >= len(ch.req.prompt):
-                # prompt complete: the logit at its last real token is the
-                # first generated token
-                seq = self._seq_of(ch.req.rid)
-                tok = self._sample(logits[row, ch.length - 1])
-                seq.out.append(tok)
-                seq.prefill_done = True
-                # a recomputed (preempted) request already delivered its
-                # first token before eviction — keep the original TTFT
-                seq.first_token_time = self._first_token_times.pop(
-                    ch.req.rid, now)
-                self.stats["generated_tokens"] += 1
-                # the first token can already satisfy the stop conditions
-                if (len(seq.out) >= seq.req.max_new_tokens
-                        or (seq.req.eos_id is not None
-                            and tok == seq.req.eos_id)):
-                    self._evict(seq, now, finished)
+    def _admit(self, req: Request) -> _Seq:
+        seq = _Seq(req, slot=self._free_slots.pop())
+        self._live.append(seq)
+        return seq
 
     def _evict(self, seq: _Seq, now: float, finished: List[RequestResult]
                ) -> None:
         self._live.remove(seq)
+        self._free_slots.append(seq.slot)
         self.kv.free_seq(seq.req.rid)
         self.scheduler.forget(seq.req)
         self._first_token_times.pop(seq.req.rid, None)
@@ -217,11 +249,16 @@ class Engine:
 
     def _preempt_one(self, exclude_rid: int) -> bool:
         """Kick the most recently admitted live sequence back to the
-        waiting line (recompute mode) and reclaim its blocks."""
+        waiting line (recompute mode) and reclaim its blocks.  The caller
+        must have flushed in-flight steps first: preemption folds the
+        victim's generated tokens into its prompt, which requires their
+        values on host."""
+        assert not self._pending
         for victim in reversed(self._live):
-            if victim.req.rid == exclude_rid:
+            if victim.req.rid == exclude_rid or victim.done:
                 continue
             self._live.remove(victim)
+            self._free_slots.append(victim.slot)
             self.kv.free_seq(victim.req.rid)
             self.scheduler.preempt(victim.req, victim.out)
             rid = victim.req.rid
@@ -232,29 +269,260 @@ class Engine:
             return True
         return False
 
-    def _decode(self, now: float, finished: List[RequestResult]) -> None:
-        # up to max_batch ready sequences decode, FCFS by admission; the
-        # lookahead tail waits (its prefilled state keeps: identity lives
-        # in the block tables, not in a row)
+    # -- in-flight bookkeeping ----------------------------------------------
+
+    def _fetch_one(self, finished: List[RequestResult]) -> None:
+        """Materialize the oldest dispatched step's tokens on host, apply
+        stop conditions that depend on token values (eos), and evict
+        sequences whose last token just landed."""
+        rec = self._pending.popleft()
+        toks = np.asarray(rec.toks)            # sync point
+        self.stats["host_syncs"] += 1
+        logits = (np.asarray(rec.logits)
+                  if self.cfg.temperature > 0.0 else None)
+        for row, seq, is_first in rec.emits:
+            tok = (int(toks[row]) if logits is None
+                   else self._sample(logits[row]))
+            seq.out.append(tok)
+            if is_first:
+                # a recomputed (preempted) request already delivered its
+                # first token before eviction — keep the original TTFT
+                seq.first_token_time = self._first_token_times.pop(
+                    seq.req.rid, rec.now)
+            if (seq.req.eos_id is not None and tok == seq.req.eos_id
+                    and not seq.done):
+                seq.done = True
+                seq.gen_count = len(seq.out)   # discard nothing: eos is sync
+            if seq.done and len(seq.out) >= seq.gen_count \
+                    and seq in self._live:
+                self._evict(seq, rec.now, finished)
+
+    def _flush(self, finished: List[RequestResult]) -> None:
+        while self._pending:
+            self._fetch_one(finished)
+
+    # -- fused step ---------------------------------------------------------
+
+    def _dispatch(self, tokens, meta, tables):
+        """One fused call.  tokens (B,C), meta (4,B) packed
+        pos/valid/src/dst, tables (B,NB) — three host->device transfers
+        total; the layer broadcast of the tables happens inside the jit."""
+        self.stats["model_calls"] += 1
+        toks, logits, self._slot_buf, self.cache = self._step_fn(
+            self.params, self.cache, self._slot_buf, tokens, tables, meta)
+        return toks, logits
+
+    def _step_fused(self, now: float, finished: List[RequestResult]) -> None:
+        cfg = self.cfg
+        # stop conditions that depend on token values force synchronous
+        # fetches; pure max_new_tokens stopping is host-predictable and
+        # lets the engine run a step ahead of the fetch
+        plan = self.scheduler.schedule(len(self._live), self.kv)
+        active = [s for s in self._live
+                  if s.prefill_done and not s.done][:cfg.max_batch]
+        # grow each decoding sequence's table to cover the token being
+        # written; preempt LIFO victims if the pool is out of blocks
+        for seq in active:
+            if seq not in self._live:
+                # a preemption on an earlier row's behalf evicted this
+                # one — growing its table now would hand the just-freed
+                # blocks straight back to the dead rid
+                continue
+            while not self.kv.ensure_capacity(seq.req.rid,
+                                              seq.next_pos + 1):
+                if self._pending:
+                    # finished-but-unfetched sequences may be holding
+                    # blocks; materialize them before sacrificing a
+                    # victim (preemption also needs token values on host)
+                    self._flush(finished)
+                    continue
+                if not self._preempt_one(exclude_rid=seq.req.rid):
+                    raise RuntimeError(
+                        "KV pool too small for a single sequence; raise "
+                        "num_blocks or lower max_seq_len")
+        # preemption (or an eos eviction inside the flush) may have
+        # removed members of `active` or owners of planned chunks
+        active = [s for s in active if s in self._live]
+        plan = [ch for ch in plan if self.scheduler.planned(ch.req)]
+        if not active and not plan:
+            self._flush(finished)
+            return
+
+        sync = (cfg.temperature > 0.0
+                or any(s.req.eos_id is not None for s in active)
+                or any(ch.req.eos_id is not None for ch in plan))
+        if sync:
+            self._flush(finished)
+
+        # ONE fused fixed-shape call per step; the row layout adapts to
+        # the step's composition, each shape matching the cheapest legacy
+        # layout for that regime or beating it:
+        #   decode-only  -> (bucket, 1): the plain batched-decode shape;
+        #   prefill-only -> (prefill_rows, chunk): chunk-wide rows (the
+        #                   fused call handles C>1 via per-row valid_len),
+        #                   same shape the legacy prefill call used —
+        #                   fewer rows means fewer per-row KV-pool
+        #                   gathers;
+        #   mixed        -> (bucket, 1): width-1 rows with prefill chunks
+        #                   SPLIT into one row per token.  This costs
+        #                   exactly the token-positions of the legacy
+        #                   prefill-call-plus-decode-call pair (instead
+        #                   of padding every decode row to the chunk
+        #                   width) while paying ONE dispatch.  Chunk
+        #                   token i attends its siblings' KV because
+        #                   every row's scatter lands before any row's
+        #                   gather within the call.
+        n_dec = len(active)
+        n_pre = sum(ch.length for ch in plan)
+        if n_pre == 0:
+            rows, width = min(k for k in cfg.decode_buckets
+                              if k >= n_dec), 1
+        elif n_dec == 0:
+            rows, width = cfg.prefill_rows, cfg.prefill_chunk
+        else:
+            rows, width = min(k for k in cfg.mixed_buckets
+                              if k >= n_dec + n_pre), 1
+        tokens = np.zeros((rows, width), np.int32)
+        meta = np.zeros((4, rows), np.int32)
+        meta[2:] = -1
+        pos, valid, src, dst = meta
+        rids: List[Optional[int]] = [None] * rows
+        emits: List[Tuple[int, _Seq, bool]] = []
+
+        for row, seq in enumerate(active):
+            pos[row] = seq.next_pos
+            valid[row] = 1
+            rids[row] = seq.req.rid
+            dst[row] = seq.slot
+            if cfg.temperature <= 0.0:
+                # greedy: the slot buffer always holds this sequence's
+                # latest sampled token — no host round-trip
+                src[row] = seq.slot
+            else:
+                tokens[row, 0] = seq.out[-1]
+            emits.append((row, seq, False))
+            seq.gen_count += 1
+            if seq.gen_count >= seq.req.max_new_tokens:
+                seq.done = True
+        row = n_dec
+        for ch in plan:
+            seq = self._seq_of(ch.req.rid)
+            if seq is None:                    # fresh admission
+                seq = self._admit(ch.req)
+            self.stats["prefill_tokens"] += ch.length
+            completes = ch.start + ch.length >= len(ch.req.prompt)
+            chunk_tok = ch.req.prompt[ch.start:ch.start + ch.length]
+            if width > 1:                      # prefill-only: one row/chunk
+                tokens[row, :ch.length] = chunk_tok
+                pos[row] = ch.start
+                valid[row] = ch.length
+                rids[row] = ch.req.rid
+                if completes:
+                    # prompt complete: the frontier logit is the first
+                    # generated token
+                    dst[row] = seq.slot
+                    seq.prefill_done = True
+                    emits.append((row, seq, True))
+                    seq.gen_count += 1
+                    if seq.gen_count >= seq.req.max_new_tokens:
+                        seq.done = True
+                row += 1
+                continue
+            for i in range(ch.length):         # mixed: one row/token
+                tokens[row, 0] = chunk_tok[i]
+                pos[row] = ch.start + i
+                valid[row] = 1
+                rids[row] = ch.req.rid
+                if completes and i == ch.length - 1:
+                    dst[row] = seq.slot
+                    seq.prefill_done = True
+                    emits.append((row, seq, True))
+                    seq.gen_count += 1
+                    if seq.gen_count >= seq.req.max_new_tokens:
+                        seq.done = True
+                row += 1
+
+        toks, logits = self._dispatch(tokens, meta,
+                                      self.kv.table_array(rids))
+        self.stats["generated_tokens"] += len(emits)
+        if n_dec:
+            self.stats["decode_steps"] += 1
+            self.stats["decode_slot_steps"] += (rows if n_pre == 0
+                                                else cfg.max_batch)
+            self.stats["decode_active_slot_steps"] += n_dec
+        self._pending.append(_Inflight(toks, logits, emits, now))
+        if sync or not cfg.pipeline:
+            self._flush(finished)
+        else:
+            # depth-1 pipeline: this step computes while the host reads
+            # the previous step's tokens and plans the next
+            while len(self._pending) > 1:
+                self._fetch_one(finished)
+
+    # -- legacy two-call step (PR-1 baseline, kept for benchmarking) --------
+
+    def _run_model_legacy(self, tokens: np.ndarray, pos: np.ndarray,
+                          tables: np.ndarray):
+        self.stats["model_calls"] += 1
+        self.stats["host_syncs"] += 1
+        cache = transformer.with_block_tables(self.cache,
+                                              jnp.asarray(tables))
+        logits, self.cache = self._legacy_fn(
+            self.params, cache, jnp.asarray(tokens), jnp.asarray(pos))
+        return np.asarray(jax.device_get(logits), np.float32)
+
+    def _prefill_legacy(self, chunks, now: float,
+                        finished: List[RequestResult]) -> None:
+        if not chunks:
+            return
+        b, c = self.cfg.prefill_rows, self.cfg.prefill_chunk
+        assert len(chunks) <= b
+        tokens = np.zeros((b, c), np.int32)
+        pos = np.zeros((b,), np.int32)
+        rids: List[Optional[int]] = [None] * b
+        for row, ch in enumerate(chunks):
+            tokens[row, :ch.length] = \
+                ch.req.prompt[ch.start:ch.start + ch.length]
+            pos[row] = ch.start
+            rids[row] = ch.req.rid
+            if self._seq_of(ch.req.rid) is None:     # fresh admission
+                self._admit(ch.req)
+        logits = self._run_model_legacy(tokens, pos,
+                                        self.kv.table_array(rids))
+        for row, ch in enumerate(chunks):
+            self.stats["prefill_tokens"] += ch.length
+            if ch.start + ch.length >= len(ch.req.prompt):
+                seq = self._seq_of(ch.req.rid)
+                tok = self._sample(logits[row, ch.length - 1])
+                seq.out.append(tok)
+                seq.gen_count = len(seq.out)
+                seq.prefill_done = True
+                seq.first_token_time = self._first_token_times.pop(
+                    ch.req.rid, now)
+                self.stats["generated_tokens"] += 1
+                if (len(seq.out) >= seq.req.max_new_tokens
+                        or (seq.req.eos_id is not None
+                            and tok == seq.req.eos_id)):
+                    self._evict(seq, now, finished)
+
+    def _decode_legacy(self, now: float,
+                       finished: List[RequestResult]) -> None:
         active = [s for s in self._live if s.prefill_done]
         active = active[:self.cfg.max_batch]
         if not active:
             return
-        # grow each sequence's table to cover the token being written;
-        # preempt LIFO victims if the pool is out of blocks
         for seq in active:
+            if seq not in self._live:   # evicted by an earlier preemption
+                continue
             while not self.kv.ensure_capacity(seq.req.rid,
                                               seq.next_pos + 1):
                 if not self._preempt_one(exclude_rid=seq.req.rid):
                     raise RuntimeError(
                         "KV pool too small for a single sequence; raise "
                         "num_blocks or lower max_seq_len")
-        # preemption may have evicted other members of `active`
         active = [s for s in active if s in self._live]
         if not active:
             return
-        # smallest compiled bucket that fits (rows are stateless, so the
-        # drain phase legitimately runs a narrower batch)
         b = min(k for k in self.cfg.decode_buckets if k >= len(active))
         tokens = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
@@ -263,13 +531,15 @@ class Engine:
             tokens[row, 0] = seq.out[-1]
             pos[row] = seq.next_pos
             rids[row] = seq.req.rid
-        logits = self._run_model(tokens, pos, self.kv.table_array(rids))
+        logits = self._run_model_legacy(tokens, pos,
+                                        self.kv.table_array(rids))
         self.stats["decode_steps"] += 1
         self.stats["decode_slot_steps"] += b
         self.stats["decode_active_slot_steps"] += len(active)
         for row, seq in enumerate(active):
             tok = self._sample(logits[row, 0])
             seq.out.append(tok)
+            seq.gen_count = len(seq.out)
             self.stats["generated_tokens"] += 1
             done = (len(seq.out) >= seq.req.max_new_tokens
                     or (seq.req.eos_id is not None
@@ -280,32 +550,45 @@ class Engine:
     # -- public loop --------------------------------------------------------
 
     def warmup(self) -> None:
-        """Compile every fixed shape this engine can emit (all decode
-        buckets + the fused prefill) against the trash block, so no XLA
-        compile lands mid-serving.  Cache contents are untouched: writes
-        go to block 0 and no sequence state exists yet."""
-        for b in self.cfg.decode_buckets:
-            self._run_model(np.zeros((b, 1), np.int32),
-                            np.zeros((b,), np.int32),
-                            self.kv.table_array([None] * b))
-        rows = self.cfg.prefill_rows
-        self._run_model(np.zeros((rows, self.cfg.prefill_chunk), np.int32),
-                        np.zeros((rows,), np.int32),
-                        self.kv.table_array([None] * rows))
+        """Compile every fixed shape this engine can emit against the
+        trash block, so no XLA compile lands mid-serving.  Cache contents
+        are untouched: writes go to block 0 and no sequence state exists
+        yet (valid_len 0 masks every write there anyway)."""
+        shapes = [(b, 1) for b in self.cfg.decode_buckets]
+        shapes += [(self.cfg.prefill_rows, self.cfg.prefill_chunk)]
+        if self.cfg.fused:
+            shapes += [(b, 1) for b in self.cfg.mixed_buckets]
+        for rows, width in shapes:
+            tables = self.kv.table_array([None] * rows)
+            if self.cfg.fused:
+                meta = np.zeros((4, rows), np.int32)
+                meta[2:] = -1
+                toks, _ = self._dispatch(np.zeros((rows, width), np.int32),
+                                         meta, tables)
+                jax.block_until_ready(toks)
+            else:
+                self._run_model_legacy(np.zeros((rows, width), np.int32),
+                                       np.zeros((rows,), np.int32), tables)
+        # compile dispatches are not serving work — keep the
+        # calls/syncs telemetry about the traffic itself
+        self.stats["model_calls"] = 0
+        self.stats["host_syncs"] = 0
 
     @property
     def has_work(self) -> bool:
-        return self.scheduler.has_waiting or bool(self._live)
+        return (self.scheduler.has_waiting or bool(self._live)
+                or bool(self._pending))
 
     def step(self, now: Optional[float] = None) -> List[RequestResult]:
         """One engine iteration; returns requests finished this step."""
         now = time.perf_counter() if now is None else now
         finished: List[RequestResult] = []
-        plan = self.scheduler.schedule(len(self._live), self.kv)
-        self._prefill(plan, now, finished)
-        # sequences that just produced their first token also decode this
-        # step: prefill ran while the decode batch was below capacity
-        self._decode(now, finished)
+        if self.cfg.fused:
+            self._step_fused(now, finished)
+        else:
+            plan = self.scheduler.schedule(len(self._live), self.kv)
+            self._prefill_legacy(plan, now, finished)
+            self._decode_legacy(now, finished)
         self.stats["steps"] += 1
         return finished
 

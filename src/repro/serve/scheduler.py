@@ -201,6 +201,13 @@ class Scheduler:
     def forget(self, req: Request) -> None:
         self._progress.pop(req.rid, None)
 
+    def planned(self, req: Request) -> bool:
+        """Whether ``req`` still has prefill progress on the books — False
+        once it is preempted or forgotten.  The engine uses this to drop
+        chunks from an already-planned step whose owner a preemption
+        evicted between ``schedule()`` and dispatch."""
+        return req.rid in self._progress
+
     @property
     def has_waiting(self) -> bool:
         return bool(self.waiting) or bool(self.prefilling)

@@ -155,29 +155,32 @@ def test_flash_decode_equals_model_decode_attention():
 # ---------------------------------------------------------------------------
 
 PAGED_SHAPES = [
-    # nb, bs, kv, hd, b, h, nb_seq, window
-    (16, 8, 2, 64, 3, 4, 4, 0),
-    (9, 16, 1, 128, 2, 4, 4, 0),
-    (32, 8, 4, 96, 2, 8, 6, 20),   # GQA + sliding window + hd pad
+    # nb, bs, kv, hd, b, c, h, nb_seq, window
+    (16, 8, 2, 64, 3, 1, 4, 4, 0),
+    (9, 16, 1, 128, 2, 1, 4, 4, 0),
+    (32, 8, 4, 96, 2, 1, 8, 6, 20),   # GQA + sliding window + hd pad
+    (16, 8, 2, 64, 3, 4, 4, 4, 0),    # chunked queries (fused prefill)
+    (32, 8, 4, 96, 2, 8, 8, 6, 20),   # chunk + window + hd pad
 ]
 
 
 @pytest.mark.parametrize("case", PAGED_SHAPES)
 @pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
 def test_flash_decode_paged_sweep(case, dt):
-    nb, bs, kv, hd, b, h, nb_seq, window = case
-    ks = jax.random.split(jax.random.key(nb + hd), 3)
-    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32).astype(dt)
+    nb, bs, kv, hd, b, c, h, nb_seq, window = case
+    ks = jax.random.split(jax.random.key(nb + hd + c), 3)
+    q = jax.random.normal(ks[0], (b, c, h, hd), jnp.float32).astype(dt)
     kp = jax.random.normal(ks[1], (nb, bs, kv, hd), jnp.float32).astype(dt)
     vp = jax.random.normal(ks[2], (nb, bs, kv, hd), jnp.float32).astype(dt)
     rng = np.random.default_rng(nb)
     # disjoint non-trash physical blocks per sequence, shuffled
     perm = rng.permutation(np.arange(1, nb))[:b * nb_seq]
     bt = jnp.asarray(perm.reshape(b, nb_seq), jnp.int32)
-    lengths = jnp.asarray(rng.integers(1, nb_seq * bs + 1, (b,)), jnp.int32)
-    o1 = ops.flash_decode_paged(q, kp, vp, bt, lengths, window=window)
-    o2 = ref.flash_decode_paged(q, kp, vp, bt, lengths, window=window)
-    assert o1.shape == (b, h, hd)
+    # position of each row's first query; the row's c queries must fit
+    pos = jnp.asarray(rng.integers(0, nb_seq * bs - c + 1, (b,)), jnp.int32)
+    o1 = ops.flash_decode_paged(q, kp, vp, bt, pos, window=window)
+    o2 = ref.flash_decode_paged(q, kp, vp, bt, pos, window=window)
+    assert o1.shape == (b, c, h, hd)
     np.testing.assert_allclose(np.float32(o1), np.float32(o2), **_tol(dt))
 
 
@@ -192,7 +195,8 @@ def test_flash_decode_paged_matches_contiguous():
     nb_seq = 4
     bt = jnp.stack([jnp.arange(1, 5), jnp.arange(5, 9)]).astype(jnp.int32)
     length = 200
-    o_paged = ops.flash_decode_paged(q, kp, vp, bt, jnp.full((b,), length))
+    o_paged = ops.flash_decode_paged(q[:, None], kp, vp, bt,
+                                     jnp.full((b,), length - 1))[:, 0]
     kc = kp[bt].reshape(b, nb_seq * bs, kv, hd)
     vc = vp[bt].reshape(b, nb_seq * bs, kv, hd)
     o_flat = ops.flash_decode(q, kc, vc, length, block_kv=64)

@@ -12,6 +12,7 @@ from conftest import make_batch
 from repro.configs.base import get_config, smoke_variant, available_archs
 from repro.models.model import build_model
 from repro.core import TrainerConfig, make_init_state, make_shardmap_step
+from repro.launch.mesh import make_mesh
 from repro.optim.sgd import OptimConfig
 
 ASSIGNED = ["qwen2-1.5b", "minicpm-2b", "dbrx-132b", "qwen1.5-0.5b",
@@ -31,8 +32,7 @@ def test_smoke_forward_and_train_step(arch):
     assert np.isfinite(float(loss)), f"{arch} loss not finite"
 
     # one real train step on a 1x1 mesh
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     tcfg = TrainerConfig(sync_mode="lsgd", optim=OptimConfig())
     state = make_init_state(model, tcfg)(jax.random.key(0))
     step = make_shardmap_step(model, tcfg, lambda t: 0.01, mesh)

@@ -24,8 +24,8 @@ import dataclasses, json, jax, jax.numpy as jnp
 from repro import sharding
 from repro.configs.base import get_config, smoke_variant
 from repro.models import moe
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = smoke_variant(get_config("dbrx-132b"))
 cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, num_experts=4,
                                           capacity_factor=16.0))
@@ -58,8 +58,8 @@ import dataclasses, json, jax, jax.numpy as jnp
 from repro import sharding
 from repro.configs.base import get_config, smoke_variant
 from repro.models import moe
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = smoke_variant(get_config("deepseek-v3-671b"))
 cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, num_experts=4,
                                           num_experts_per_tok=2,

@@ -14,6 +14,7 @@ import pytest
 from repro.configs.base import get_config, smoke_variant
 from repro.core.topology import Topology
 from repro.data.pipeline import DataConfig, HostLoader
+from repro.models import transformer
 from repro.models.model import build_model
 from repro.serve import (Engine, EngineConfig, PagedKVCache, ReplicaRouter,
                          Request, RequestQueue, Scheduler)
@@ -303,6 +304,109 @@ def test_engine_single_token_and_first_token_eos(lm):
     (res,) = eng.run([Request(prompt=prompt, max_new_tokens=4,
                               eos_id=int(ref[0]))]).values()
     assert res.tokens == ref[:1]                 # eos as the first token
+
+
+def test_paged_step_stale_row_cannot_clobber_live_blocks(lm):
+    """Regression for the fused mixed prefill+decode call: a padded or
+    stale row (valid_len=0) whose block table still points at a live
+    sequence's blocks — and whose padded positions land INSIDE that
+    table — must route every KV write to the trash block.  Without the
+    per-row valid-length mask the padding columns would overwrite the
+    live sequence's last block."""
+    cfg, model, params = lm
+    bs, nb, bps, width = 8, 8, 4, 16
+    prompt = np.asarray(np.random.default_rng(8).integers(
+        0, cfg.vocab_size, (10,)), np.int32)
+    step = jax.jit(model.paged_step)          # no donation: keep inputs
+
+    def prefill(stale_table):
+        cache = model.init_paged_cache(nb, bs, 2, bps)
+        slot_buf = jnp.zeros((3,), jnp.int32)
+        # row 0: live prefill of the prompt into blocks [1, 2]
+        # row 1: inactive row; its table either points at row 0's blocks
+        # (stale) or at the trash block, with a stale in-table position
+        row1 = [1, 2, 0, 0] if stale_table else [0, 0, 0, 0]
+        tables = jnp.asarray([[1, 2, 0, 0], row1], jnp.int32)
+        tokens = np.zeros((2, width), np.int32)
+        tokens[0, :10] = prompt
+        tokens[1, :] = 7                      # garbage a clobber would leak
+        meta = np.asarray([[0, 5],            # row 1 pos 5: in-table
+                           [10, 0],           # row 1 valid_len 0
+                           [-1, -1],
+                           [0, -1]], np.int32)
+        toks, _, slot_buf, cache = step(
+            params, cache, slot_buf, jnp.asarray(tokens), tables,
+            jnp.asarray(meta))
+        return toks, cache
+
+    toks_stale, cache_stale = prefill(stale_table=True)
+    toks_clean, cache_clean = prefill(stale_table=False)
+    assert int(toks_stale[0]) == int(toks_clean[0])
+    for run in cache_clean:
+        for kk in ("k", "v"):
+            np.testing.assert_array_equal(          # non-trash blocks only
+                np.asarray(cache_stale[run][kk][:, 1:]),
+                np.asarray(cache_clean[run][kk][:, 1:]))
+
+
+def test_fused_unfused_and_pipeline_modes_token_identical(lm):
+    """The fused single-call engine (device-side sampling, pipelined
+    dispatch) and the PR-1 two-call host-sampling loop must produce the
+    same tokens for the same workload — including under pool-starvation
+    preemption."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(6)
+    protos = [(rng.integers(0, cfg.vocab_size, (int(p),)), int(g))
+              for p, g in zip(rng.integers(3, 30, 5), rng.integers(2, 14, 5))]
+    ecfg = dict(max_batch=3, block_size=4, num_blocks=14, max_seq_len=44,
+                prefill_chunk=8, prefill_token_budget=16)
+    outs = {}
+    for name, kw in [("fused", dict(fused=True, pipeline=True)),
+                     ("fused_sync", dict(fused=True, pipeline=False)),
+                     ("unfused", dict(fused=False))]:
+        eng = Engine(model, params, EngineConfig(**ecfg, **kw))
+        res = eng.run([Request(prompt=np.asarray(p).copy(),
+                               max_new_tokens=g) for p, g in protos])
+        outs[name] = [res[r].tokens for r in sorted(res)]
+        if name == "fused":
+            assert eng.stats["preemptions"] > 0
+    assert outs["fused"] == outs["unfused"]
+    assert outs["fused"] == outs["fused_sync"]
+
+
+def test_preempted_victim_keeps_no_blocks(lm):
+    """Regression: when the capacity loop preempts a victim that sits
+    later in the same step's active list, the loop must NOT re-grow the
+    dead rid's table — that would hand the just-freed blocks straight
+    back to the evicted sequence and cascade preemptions (or raise a
+    spurious pool-too-small error)."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(11)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (10,)),
+                    max_new_tokens=12) for _ in range(2)]
+    # 8 usable blocks of 4 tokens = 32 slots for 2 x 22 live tokens:
+    # guaranteed starvation while both sequences decode
+    eng = Engine(model, params, EngineConfig(
+        max_batch=2, block_size=4, num_blocks=9, max_seq_len=24,
+        prefill_chunk=8, prefill_token_budget=16))
+    for r in reqs:
+        eng.submit(Request(prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens))
+    results = {}
+    while eng.has_work:
+        for res in eng.step():
+            results[res.rid] = res
+        # invariant: only live sequences may hold blocks
+        live = {s.req.rid for s in eng._live}
+        held = {rid for rid, blocks in eng.kv._tables.items() if blocks}
+        assert held <= live, f"dead rids holding blocks: {held - live}"
+        if not eng.has_work:
+            break
+    assert eng.stats["preemptions"] > 0
+    for req, rid in zip(reqs, sorted(results)):
+        ref = _sequential_greedy(model, params, req.prompt,
+                                 req.max_new_tokens)
+        assert results[rid].tokens == ref
 
 
 def test_engine_eos_and_queue_feed(lm):

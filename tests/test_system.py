@@ -63,13 +63,13 @@ def test_checkpoint_resume_exact(tmp_path):
     from repro.models.model import build_model
     from repro.core import TrainerConfig, make_init_state, make_shardmap_step
     from repro.checkpoint import checkpoint
+    from repro.launch.mesh import make_mesh
     from conftest import make_batch, tree_max_diff
 
     cfg = smoke_variant(get_config("qwen1.5-0.5b")).replace(
         num_layers=2, d_model=64, d_ff=128, vocab_size=64)
     model = build_model(cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     tcfg = TrainerConfig(sync_mode="lsgd")
     step = jax.jit(make_shardmap_step(model, tcfg, lambda t: 0.05, mesh))
     batches = [make_batch(cfg, 4, 16, seed=s) for s in range(4)]

@@ -29,9 +29,9 @@ from repro.core import (TrainerConfig, Topology, make_init_state,
                         make_shardmap_step, make_finalize)
 from repro.core import virtual
 from repro.optim.sgd import OptimConfig
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = smoke_variant(get_config("qwen1.5-0.5b")).replace(
     num_layers=2, d_model=64, d_ff=128, vocab_size=64)
 m = build_model(cfg)
