@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import os
 import sys
 import time
@@ -228,7 +229,26 @@ def main():
     ap.add_argument("--steps", type=int, default=None,
                     help="cap engine iterations (CI smoke); skips the "
                     "static baseline and the speedup check")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the result rows as JSON (CI uploads this "
+                    "as a workflow artifact so the perf trajectory is "
+                    "recoverable from CI history)")
     args = ap.parse_args()
+
+    rows = []
+
+    def emit(row):
+        rows.append(row)
+        report(row)
+
+    def write_json():
+        if args.json:
+            payload = {"arch": args.arch, "requests": args.requests,
+                       "rate": args.rate, "batch": args.batch,
+                       "steps": args.steps, "rows": rows}
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2, default=float)
+            print(f"wrote {args.json}")
 
     cfg = smoke_variant(get_config(args.arch)).replace(mtp_depth=0)
     model = build_model(cfg)
@@ -254,9 +274,10 @@ def main():
         workload = shards[0]     # bench one replica's share
 
     if args.steps is not None:
-        report(run_continuous(model, params, workload, ecfg,
-                              max_steps=args.steps))
+        emit(run_continuous(model, params, workload, ecfg,
+                            max_steps=args.steps))
         print("[smoke] static + unfused baselines skipped")
+        write_json()
         return
     # The unfused baseline is the PR-1 engine: two device calls per
     # step, (rows, chunk, V) logits to host, host-side argmax,
@@ -277,11 +298,11 @@ def main():
                          kinds=("fused", "unfused")) for _ in range(3)]
     fused, unfused = sorted(trials,
                             key=lambda t: t[0]["tok_per_s"])[len(trials)//2]
-    report(fused)
-    report(unfused)
+    emit(fused)
+    emit(unfused)
     static = sorted((run_static(model, params, workload, args.batch)
                      for _ in range(3)), key=lambda r: r["tok_per_s"])[1]
-    report(static)
+    emit(static)
 
     rs = sorted(f["tok_per_s"] / u["tok_per_s"] for f, u in trials)
     fused_gain = rs[len(rs) // 2]
@@ -294,6 +315,9 @@ def main():
           f"{fused['stats']['host_syncs']} vs "
           f"{unfused['stats']['host_syncs']})")
     print(f"continuous/static tokens-per-sec:             {speedup:.2f}x")
+    rows.append({"kind": "ratios", "fused_over_unfused": fused_gain,
+                 "continuous_over_static": speedup})
+    write_json()
     if fused_gain < 1.3:
         # On this 2-core CPU container the step is dominated by per-call
         # XLA overhead that both engines pay identically, so the fused

@@ -89,6 +89,40 @@ def flash_decode_paged(q, k_pool, v_pool, block_tables, pos, *,
     return o.reshape(b, c, h, hd).astype(q.dtype)
 
 
+def mla_decode_paged(q_lat, q_rope, ckv_pool, kr_pool, block_tables, pos, *,
+                     scale):
+    """Oracle for paged-MLA absorbed attention over a *latent* block pool.
+
+    The paged MLA cache stores the compressed c_kv latents (kv_lora_rank)
+    plus the shared rotary key per token — one pool pair per layer instead
+    of expanded K/V pools, preserving DeepSeek's cache-memory win.  The
+    caller absorbs q_nope through W^{UK} so scores are taken directly
+    against the latents; the output stays in latent space and is expanded
+    through W^{UV} outside.
+
+    q_lat (B,C,H,r): absorbed no-pe queries; q_rope (B,C,H,rd);
+    ckv_pool (nb,bs,r); kr_pool (nb,bs,rd); block_tables (B,NB);
+    pos (B,): absolute position of each row's first query.
+    Returns o_lat (B,C,H,r).
+    """
+    b, c, h, r = q_lat.shape
+    bs = ckv_pool.shape[1]
+    nb_seq = block_tables.shape[1]
+    s = nb_seq * bs
+    ckv = ckv_pool[block_tables].reshape(b, s, r).astype(jnp.float32)
+    kr = kr_pool[block_tables].reshape(b, s, -1).astype(jnp.float32)
+    logits = (jnp.einsum("bchr,bsr->bchs", q_lat.astype(jnp.float32), ckv)
+              + jnp.einsum("bchd,bsd->bchs", q_rope.astype(jnp.float32), kr)
+              ) * scale
+    kpos = jnp.arange(s)[None, None]                           # (1,1,S)
+    qpos = (jnp.asarray(pos).reshape(-1, 1)
+            + jnp.arange(c)[None])[..., None]                  # (B,C,1)
+    logits = jnp.where((kpos <= qpos)[:, :, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bchs,bsr->bchr", p, ckv)
+    return o.astype(q_lat.dtype)
+
+
 def ssd_chunk_bchp(x, dt, dacum, B, C):
     """Oracle for kernels/ssd_chunk.py: x (bc,l,h,p); dt/dacum (bc,l,h);
     B,C (bc,l,h,n) -> (y (bc,l,h,p), states (bc,h,n,p))."""

@@ -187,6 +187,37 @@ def paged_decode_attention(q, k_cache, v_cache, q_positions, *,
                       v_cache)
 
 
+def paged_write_indices(positions, block_tables, block_size, valid_len):
+    """(block, slot) scatter targets for writing per-token paged state.
+
+    positions (B,C) absolute token positions; block_tables (B,NB);
+    valid_len (B,) or None.  Logical block i of row b lives at physical
+    block block_tables[b, i].  Two kinds of padding must land in the
+    trash block (physical 0), NEVER clamped onto a real block (that
+    would clobber live cache a later query still attends to):
+
+      * tail positions of a fixed-shape chunk that run past the block
+        table;
+      * columns >= the row's valid_len (a decode row in a fused mixed
+        prefill+decode call carries C-1 padding columns whose positions
+        land INSIDE the sequence's own table — without the per-row
+        valid-length mask they'd overwrite live state).
+
+    Shared by the K/V paged path and the MLA latent paged path — the
+    trash-block invariant is regression-tested once and holds for both.
+    """
+    c = positions.shape[1]
+    lblk = positions // block_size
+    writable = lblk < block_tables.shape[1]
+    if valid_len is not None:
+        writable &= jnp.arange(c)[None] < valid_len[:, None]
+    blk = jnp.take_along_axis(
+        block_tables, jnp.minimum(lblk, block_tables.shape[1] - 1),
+        axis=1)                                                 # (B,C)
+    blk = jnp.where(writable, blk, 0)
+    return blk, positions % block_size
+
+
 def make_cross_cache(params, kv_x, cfg, num_kv_heads=None):
     """Precompute cross-attention k/v from encoder output (no rope)."""
     kv = num_kv_heads or cfg.num_kv_heads
@@ -300,25 +331,10 @@ def apply_attention(params, x, cfg, *, positions=None, causal=True,
         if use_rope:
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
-        # scatter the C new k/v rows into each sequence's blocks; logical
-        # block i of sequence b lives at physical block bt[b, i].  Two
-        # kinds of padding must land in the trash block (physical 0),
-        # NEVER clamped onto a real block (that would clobber live cache
-        # a later query still attends to):
-        #   * tail positions of a fixed-shape chunk that run past the
-        #     block table;
-        #   * columns >= the row's valid_len (a decode row in a fused
-        #     mixed prefill+decode call carries C-1 padding columns whose
-        #     positions land INSIDE the sequence's own table — without
-        #     the per-row valid-length mask they'd overwrite live KV).
-        lblk = positions // bs_blk
-        writable = lblk < bt.shape[1]
-        if valid_len is not None:
-            writable &= jnp.arange(c)[None] < valid_len[:, None]
-        blk = jnp.take_along_axis(bt, jnp.minimum(lblk, bt.shape[1] - 1),
-                                  axis=1)                       # (B,C)
-        blk = jnp.where(writable, blk, 0)
-        slot = positions % bs_blk
+        # scatter the C new k/v rows into each sequence's blocks; padding
+        # (past the table or past valid_len) routes to the trash block —
+        # see paged_write_indices
+        blk, slot = paged_write_indices(positions, bt, bs_blk, valid_len)
         kpool = kpool.at[blk, slot].set(k.astype(kpool.dtype))
         vpool = vpool.at[blk, slot].set(v.astype(vpool.dtype))
         if cfg.attn_impl == "pallas":

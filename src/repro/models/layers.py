@@ -147,6 +147,31 @@ def apply_conv1d(params, x, cache=None):
     return y, new_cache
 
 
+def slot_conv_window(conv0, x_raw, valid_len):
+    """Conv cache for a paged state slot: the last K-1 *valid* inputs.
+
+    The window of [conv0 | x_raw] ends just before column ``valid_len``
+    (``apply_conv1d``'s own tail window would capture padded columns).
+    valid_len None means every column is valid.  Shared by the ssm and
+    rglru slot-state paths."""
+    b, s = x_raw.shape[:2]
+    k1 = conv0.shape[1]
+    full = jnp.concatenate([conv0, x_raw], axis=1)      # (B, K-1+S, C)
+    vl = (jnp.full((b,), s, jnp.int32) if valid_len is None else valid_len)
+    idx = vl[:, None] + jnp.arange(k1)[None]            # (B, K-1)
+    return jnp.take_along_axis(full, idx[..., None], axis=1)
+
+
+def slot_state_scatter(pool, state_slots, valid_len, value):
+    """Write each row's recurrent state back to its slot; rows with
+    ``valid_len == 0`` (padding/stale) write trash slot 0 instead, so a
+    stale engine row can never advance a live slot's state — the
+    recurrent analogue of the KV trash block."""
+    wslot = (state_slots if valid_len is None
+             else jnp.where(valid_len > 0, state_slots, 0))
+    return pool.at[wslot].set(value.astype(pool.dtype))
+
+
 # ---------------------------------------------------------------------------
 # cross entropy
 # ---------------------------------------------------------------------------

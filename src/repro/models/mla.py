@@ -67,8 +67,12 @@ def _wkv_b_split(params, cfg):
 
 
 def apply_mla(params, x, cfg, *, positions=None, cache=None, pos=None,
-              make_cache=False, cache_len=0):
-    """Returns (y, new_cache); cache = {"ckv": (B,Sc,r), "krope": (B,Sc,rope)}."""
+              valid_len=None, make_cache=False, cache_len=0):
+    """Returns (y, new_cache); cache = {"ckv": (B,Sc,r), "krope": (B,Sc,rope)}
+    for the dense decode path, or latent block pools
+    {"ckv": (nb,bs,r), "krope": (nb,bs,rope), "block_tables": (B,NB)} for
+    the paged serving path (tokens at ``pos + arange(C)`` per row; writes
+    masked by ``valid_len`` exactly like the K/V paged path)."""
     a = cfg.mla
     h = cfg.num_heads
     b = x.shape[0]
@@ -110,6 +114,35 @@ def apply_mla(params, x, cfg, *, positions=None, cache=None, pos=None,
             kr_c = kr_c.at[:, :n].set(k_rope[:, -n:])
             new_cache = {"ckv": ckv_c, "krope": kr_c}
         return y, new_cache
+
+    # ---- paged decode / chunked prefill (absorbed, latent pools) ----
+    if "block_tables" in cache:
+        from repro.kernels.ref import mla_decode_paged
+        ckv_pool, kr_pool, bt = cache["ckv"], cache["krope"], \
+            cache["block_tables"]
+        bs_blk = ckv_pool.shape[1]
+        c_tok = x.shape[1]
+        q_nope, q_rope = _project_q(params, x, cfg)    # (B,C,H,*)
+        c, k_rope = _latent_kv(params, x, cfg)         # (B,C,r), (B,C,rope)
+        positions = pos[:, None] + jnp.arange(c_tok)[None]          # (B,C)
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0, :]
+        # scatter the C latent rows into each sequence's blocks; padding
+        # (past the table, or columns >= valid_len) goes to the trash
+        # block — same helper, same invariant as the K/V paged path
+        from repro.models.attention import paged_write_indices
+        blk, slot = paged_write_indices(positions, bt, bs_blk, valid_len)
+        ckv_pool = ckv_pool.at[blk, slot].set(c.astype(ckv_pool.dtype))
+        kr_pool = kr_pool.at[blk, slot].set(k_rope.astype(kr_pool.dtype))
+        # absorb q_nope through W^{UK}; attend the latent pool directly
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)
+        o_lat = mla_decode_paged(q_lat, q_rope, ckv_pool, kr_pool, bt,
+                                 pos, scale=scale)
+        o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(dt), wv)
+        o = o.reshape(b, c_tok, h * a.v_head_dim)
+        y = jnp.einsum("bsk,kd->bsd", o, params["wo"].astype(dt))
+        return y, {"ckv": ckv_pool, "krope": kr_pool, "block_tables": bt}
 
     # ---- decode (absorbed) ----
     ckv_c, kr_c = cache["ckv"], cache["krope"]

@@ -10,17 +10,23 @@
   prefill(params, batch, cache_len) -> (logits, cache)
   input_specs(shape)              -> {name: ShapeDtypeStruct} model inputs
 
-Decoder-only LMs additionally expose the paged-KV serving interface used
-by ``repro.serve`` (continuous batching over a shared block pool):
+Decoder-only LMs additionally expose the paged serving interface used by
+``repro.serve`` (continuous batching over shared per-layer pools).  What
+is paged depends on the family — ``paged_spec`` records the capability:
 
-  init_paged_cache(num_blocks, block_size, batch, blocks_per_seq)
+  attn/local_attn   K/V block pools + per-sequence block tables
+  MLA (deepseek)    *latent* block pools (compressed c_kv + rotary key)
+  ssm/rglru         fixed-size per-slot recurrent state pools
+
+  init_paged_cache(num_blocks, block_size, batch, blocks_per_seq,
+                   num_state_slots=...)
   paged_step(params, cache, slot_buf, tokens, block_tables, meta)
       # ONE fused call per engine step: mixed prefill+decode rows
-      # (tokens (B,C); meta (4,B) packs pos/valid_len/src_slot/dst_slot),
-      # greedy argmax sampled on device, frontier logits sliced on
-      # device; slot_buf wires step k's sampled tokens into step k+1
-      # without a host round-trip.  Returns (next_tokens (B,),
-      # logits (B,V), slot_buf, cache).
+      # (tokens (B,C); meta (5,B) packs pos/valid_len/src_slot/
+      # dst_slot/state_slot), greedy argmax sampled on device, frontier
+      # logits sliced on device; slot_buf wires step k's sampled tokens
+      # into step k+1 without a host round-trip.  Returns
+      # (next_tokens (B,), logits (B,V), slot_buf, cache).
 """
 from __future__ import annotations
 
@@ -36,6 +42,31 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, resnet, transformer
 
 
+@dataclass(frozen=True)
+class PagedSpec:
+    """Per-family paged-serving capability record (replaces the old
+    all-or-nothing ``paged_ok`` gate).
+
+      has_blocks   any layer keeps a paged token pool (K/V or MLA latent)
+                   — the engine manages block tables + pool capacity
+      has_state    any layer keeps fixed-size per-slot recurrent state
+                   (ssm conv+SSD state, rglru conv+hidden) — the engine
+                   assigns each sequence a state slot
+    """
+    has_blocks: bool
+    has_state: bool
+
+    @property
+    def width1_mixed(self) -> bool:
+        """Whether mixed prefill+decode steps may split prefill chunks
+        into width-1 rows.  Recurrent state forbids it: token i+1's state
+        depends on token i's state *within the same call*, so a chunk
+        must stay one row (the chunked scan carries the dependency);
+        pure block-pool families are fine (scatter lands before gather).
+        """
+        return not self.has_state
+
+
 @dataclass
 class Model:
     cfg: ModelConfig
@@ -46,10 +77,11 @@ class Model:
     prefill: Optional[Callable]
     input_specs: Callable
     supports_decode: bool = True
-    # paged-KV serving interface (None for families without a paged form)
+    # paged serving interface (None for families without a paged form)
     init_paged_cache: Optional[Callable] = None
     paged_step: Optional[Callable] = None
     paged_step_logits: Optional[Callable] = None  # unfused PR-1 baseline
+    paged_spec: Optional[PagedSpec] = None
     # shared jax.jit wrappers keyed by (name, donate): every Engine over
     # this model reuses the same compiled executables instead of paying
     # XLA compilation per instance
@@ -107,8 +139,10 @@ def build_model(cfg: ModelConfig) -> Model:
             decode_step=functools.partial(encdec.decode_step, cfg=cfg),
             prefill=functools.partial(encdec.prefill, cfg=cfg),
             input_specs=functools.partial(_audio_input_specs, cfg))
-    paged_ok = cfg.mla is None and all(
-        k in ("attn", "local_attn") for k in cfg.layer_kinds())
+    kinds = cfg.layer_kinds()
+    spec = PagedSpec(
+        has_blocks=any(k in ("attn", "local_attn") for k in kinds),
+        has_state=any(k in ("ssm", "rglru") for k in kinds))
     return Model(
         cfg=cfg,
         init=functools.partial(transformer.init_params, cfg=cfg),
@@ -117,13 +151,16 @@ def build_model(cfg: ModelConfig) -> Model:
         decode_step=functools.partial(transformer.decode_step, cfg=cfg),
         prefill=functools.partial(transformer.prefill, cfg=cfg),
         input_specs=functools.partial(_lm_input_specs, cfg),
-        init_paged_cache=(functools.partial(transformer.init_paged_cache, cfg)
-                          if paged_ok else None),
-        paged_step=(functools.partial(transformer.paged_step, cfg=cfg)
-                    if paged_ok else None),
+        init_paged_cache=functools.partial(transformer.init_paged_cache,
+                                           cfg),
+        paged_step=functools.partial(transformer.paged_step, cfg=cfg),
+        # the unfused PR-1 baseline predates per-row valid_len/state
+        # slots; it stays the measurable baseline for block-pool
+        # families only
         paged_step_logits=(
             functools.partial(transformer.paged_step_logits, cfg=cfg)
-            if paged_ok else None))
+            if not spec.has_state else None),
+        paged_spec=spec)
 
 
 # ---------------------------------------------------------------------------

@@ -46,11 +46,23 @@ def _segment_rank(sorted_ids, n):
     return idx - seg_start
 
 
-def apply_moe(params, x, cfg):
+def apply_moe(params, x, cfg, dropless: bool = False):
     """x: (B,S,D) -> (y, aux_loss).  Dispatches to the expert-parallel
     shard_map path when a mesh with a data axis is active (the global
     scatter path triggers XLA's 'involuntary full rematerialization' —
-    the (E,C,D) buffer gets replicated; see EXPERIMENTS.md §Perf)."""
+    the (E,C,D) buffer gets replicated; see EXPERIMENTS.md §Perf).
+
+    ``dropless=True`` (decode/serving): capacity is T (top-k ids are
+    distinct per token, so no expert can receive more than T tokens) and
+    nothing is ever dropped.  Capacity dropping is a *training*
+    regularizer whose drop pattern depends on every other token in the
+    call — under chunked prefill and padded engine rows that would make
+    a token's output depend on the batch it happened to share a step
+    with (and let padding columns displace real tokens), breaking
+    engine==sequential equivalence.  Decode-time T is budgeted
+    (rows * chunk), so the (E, T, D) dispatch buffer stays small."""
+    if dropless:
+        return apply_moe_scatter(params, x, cfg, dropless=True)
     mesh = sharding.active_mesh()
     if mesh is not None and "data" in mesh.axis_names \
             and cfg.moe.num_experts % dict(
@@ -62,7 +74,7 @@ def apply_moe(params, x, cfg):
     return apply_moe_scatter(params, x, cfg)
 
 
-def apply_moe_scatter(params, x, cfg):
+def apply_moe_scatter(params, x, cfg, dropless: bool = False):
     """Portable single-program path (tests / single device)."""
     m = cfg.moe
     b, s, d = x.shape
@@ -84,7 +96,10 @@ def apply_moe_scatter(params, x, cfg):
     aux = e * jnp.sum(me * ce) * m.aux_loss_weight
 
     # -- capacity & position-in-expert via sort --
-    cap = int(max(4, -(-t * k * m.capacity_factor // e)))
+    # dropless bound is t, not t*k: top_k ids are distinct per token, so
+    # no single expert can receive more than one assignment per token
+    cap = (t if dropless
+           else int(max(4, -(-t * k * m.capacity_factor // e))))
     tk = t * k
     flat_e = expert_ids.reshape(tk)
     order = jnp.argsort(flat_e, stable=True)

@@ -15,7 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import apply_conv1d, dense_init, init_conv1d
+from repro.models.layers import (apply_conv1d, dense_init, init_conv1d,
+                                 slot_conv_window, slot_state_scatter)
 
 
 def init_rglru(key, cfg):
@@ -54,17 +55,37 @@ def _lru_scan(a, b, h0=None):
     return h
 
 
-def apply_rglru(params, x, cfg, *, cache=None, make_cache=False):
+def apply_rglru(params, x, cfg, *, cache=None, make_cache=False, pos=None,
+                valid_len=None, state_slots=None):
     """Griffin recurrent block.  x (B,S,D).
-    cache: {"conv": (B,K-1,W), "h": (B,W)}.  Returns (y, new_cache)."""
+    cache: {"conv": (B,K-1,W), "h": (B,W)}.  Returns (y, new_cache).
+
+    Paged serving mode (``state_slots`` given): cache axes are slot pools
+    ({"conv": (S,K-1,W), "h": (S,W)}); row b reads slot ``state_slots[b]``
+    (zeros when ``pos[b] == 0``) and writes back after ``valid_len[b]``
+    tokens.  Padded columns are forced to the identity update (a=1, b=0)
+    and rows with ``valid_len == 0`` write to trash slot 0, so a stale
+    engine row can never advance a live slot's recurrent state.
+    """
     g = cfg.rglru
     dt = x.dtype
     b, s, d = x.shape
+    paged = state_slots is not None and cache is not None
 
     gate = jax.nn.gelu(
         jnp.einsum("bsd,dw->bsw", x, params["w_gate"].astype(dt)))
     xr = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(dt))
-    conv_cache = cache["conv"] if cache is not None else None
+    if paged:
+        fresh = (pos == 0)
+        conv0 = jnp.where(fresh[:, None, None], 0,
+                          cache["conv"][state_slots]).astype(dt)
+        h0 = jnp.where(fresh[:, None], 0,
+                       cache["h"][state_slots]).astype(jnp.float32)
+        conv_cache = conv0
+    else:
+        conv_cache = cache["conv"] if cache is not None else None
+        h0 = (cache["h"].astype(jnp.float32) if cache is not None else None)
+    xr_raw = xr                         # pre-conv inputs (the conv window)
     xr, new_conv = apply_conv1d({"conv_w": params["conv_w"],
                                  "conv_b": params["conv_b"]}, xr,
                                 cache=conv_cache)
@@ -79,18 +100,30 @@ def apply_rglru(params, x, cfg, *, cache=None, make_cache=False):
     # sqrt(1 - a^2) with a = exp(log_a); stable via expm1
     beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
     bterm = (beta * (i.astype(jnp.float32) * xr.astype(jnp.float32)))
+    if valid_len is not None:
+        # identity update (h_t = h_{t-1}) at padded columns: neither a
+        # padded chunk tail nor a fully-padded row can move any state
+        vmask = (jnp.arange(s)[None] < valid_len[:, None])[..., None]
+        a = jnp.where(vmask, a, 1.0)
+        bterm = jnp.where(vmask, bterm, 0.0)
 
-    if s == 1 and cache is not None:
-        h = a[:, 0] * cache["h"].astype(jnp.float32) + bterm[:, 0]
+    if s == 1 and h0 is not None:
+        h = a[:, 0] * h0 + bterm[:, 0]
         hseq = h[:, None]
         h_last = h
     else:
-        h0 = cache["h"].astype(jnp.float32) if cache is not None else None
         hseq = _lru_scan(a, bterm, h0)
         h_last = hseq[:, -1]
 
     y = hseq.astype(dt) * gate
     out = jnp.einsum("bsw,wd->bsd", y, params["w_out"].astype(dt))
+    if paged:
+        new_conv = slot_conv_window(conv0, xr_raw, valid_len)
+        return out, {
+            "conv": slot_state_scatter(cache["conv"], state_slots,
+                                       valid_len, new_conv),
+            "h": slot_state_scatter(cache["h"], state_slots, valid_len,
+                                    h_last)}
     new_cache = None
     if cache is not None or make_cache:
         new_cache = {"conv": new_conv.astype(dt), "h": h_last.astype(dt)}

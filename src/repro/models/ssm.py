@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (apply_conv1d, apply_norm, dense_init,
-                                 init_conv1d)
+                                 init_conv1d, slot_conv_window,
+                                 slot_state_scatter)
 
 
 def _dims(cfg):
@@ -206,20 +207,43 @@ def ssd_recurrent_step(state, x_t, dt_t, A, B_t, C_t):
     return y, new
 
 
-def apply_ssm(params, x, cfg, *, cache=None, make_cache=False):
+def apply_ssm(params, x, cfg, *, cache=None, make_cache=False, pos=None,
+              valid_len=None, state_slots=None):
     """Mamba-2 mixer.  x (B,S,D).  cache: {"conv": (B,K-1,convdim),
-    "state": (B,H,P,N)}.  Returns (y, new_cache)."""
+    "state": (B,H,P,N)}.  Returns (y, new_cache).
+
+    Paged serving mode (``state_slots`` given): the cache axes are slot
+    pools ({"conv": (S,K-1,convdim), "state": (S,H,P,N)}) shared by every
+    engine row; row b reads its recurrent state from slot
+    ``state_slots[b]`` (zeros when ``pos[b] == 0`` — a fresh or recomputed
+    sequence starts clean without host-side zeroing) and writes it back
+    after ``valid_len[b]`` tokens.  Rows with ``valid_len == 0`` (padding
+    or stale) write to trash slot 0, and their dt is masked to 0 so the
+    update is the identity either way — a stale row can never advance a
+    live slot's state (the recurrent analogue of the KV trash block).
+    """
     s = cfg.ssm
     d_inner, n_heads, conv_dim = _dims(cfg)
     b, slen, d = x.shape
     dt_ = x.dtype
+    paged = state_slots is not None and cache is not None
 
     zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(dt_))
     z = zxbcdt[..., :d_inner]
     xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
     dt_raw = zxbcdt[..., -n_heads:]
 
-    conv_cache = cache["conv"] if cache is not None else None
+    if paged:
+        fresh = (pos == 0)
+        conv0 = jnp.where(fresh[:, None, None], 0,
+                          cache["conv"][state_slots]).astype(dt_)
+        state0 = jnp.where(fresh[:, None, None, None], 0,
+                           cache["state"][state_slots])
+        conv_cache = conv0
+    else:
+        conv_cache = cache["conv"] if cache is not None else None
+        state0 = cache["state"] if cache is not None else None
+    xBC_raw = xBC                       # pre-conv inputs (the conv window)
     xBC, new_conv = apply_conv1d({"conv_w": params["conv_w"],
                                   "conv_b": params["conv_b"]}, xBC,
                                  cache=conv_cache)
@@ -231,15 +255,20 @@ def apply_ssm(params, x, cfg, *, cache=None, make_cache=False):
         .reshape(b, slen, s.n_groups, s.d_state)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                          + params["dt_bias"].astype(jnp.float32))
+    if valid_len is not None:
+        # dt=0 makes a position the identity on the recurrence (decay
+        # exp(0)=1, input weight 0): padded columns — and whole padded
+        # rows — cannot advance any state
+        vmask = jnp.arange(slen)[None] < valid_len[:, None]     # (B,S)
+        dt = jnp.where(vmask[..., None], dt, 0.0)
     A = -jnp.exp(params["A_log"].astype(jnp.float32))
 
-    if cache is None or slen > 1:
-        init_state = cache["state"] if cache is not None else None
+    if slen > 1 or state0 is None:
         y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=s.chunk_size,
-                                     init_state=init_state)
+                                     init_state=state0)
     else:
         y_t, final_state = ssd_recurrent_step(
-            cache["state"], xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+            state0, xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
         y = y_t[:, None]
 
     y = y + xs * params["D"].astype(dt_)[None, None, :, None]
@@ -248,6 +277,13 @@ def apply_ssm(params, x, cfg, *, cache=None, make_cache=False):
     y = apply_norm(params["norm"], y * jax.nn.silu(z), cfg)
     out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
 
+    if paged:
+        new_conv = slot_conv_window(conv0, xBC_raw, valid_len)
+        return out, {
+            "conv": slot_state_scatter(cache["conv"], state_slots,
+                                       valid_len, new_conv),
+            "state": slot_state_scatter(cache["state"], state_slots,
+                                        valid_len, final_state)}
     new_cache = None
     if cache is not None or make_cache:
         new_cache = {"conv": new_conv.astype(dt_), "state": final_state}

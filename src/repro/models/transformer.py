@@ -86,7 +86,8 @@ def _layer_window(cfg, kind: str) -> int:
 
 
 def apply_layer(p, h, cfg, kind: str, ffn: str, *, positions, cache=None,
-                pos=None, valid_len=None, make_cache=False, cache_len=0):
+                pos=None, valid_len=None, state_slots=None,
+                make_cache=False, cache_len=0):
     aux = jnp.zeros((), jnp.float32)
     x = apply_norm(p["ln1"], h, cfg)
     if kind in ("attn", "local_attn"):
@@ -94,6 +95,7 @@ def apply_layer(p, h, cfg, kind: str, ffn: str, *, positions, cache=None,
         if cfg.mla is not None and kind == "attn":
             y, c = mla_mod.apply_mla(p["attn"], x, cfg, positions=positions,
                                      cache=cache, pos=pos,
+                                     valid_len=valid_len,
                                      make_cache=make_cache,
                                      cache_len=cache_len)
         else:
@@ -104,18 +106,27 @@ def apply_layer(p, h, cfg, kind: str, ffn: str, *, positions, cache=None,
                 cache_len=min(cache_len, window) if window else cache_len)
     elif kind == "ssm":
         y, c = ssm_mod.apply_ssm(p["ssm"], x, cfg, cache=cache,
-                                 make_cache=make_cache)
+                                 make_cache=make_cache, pos=pos,
+                                 valid_len=valid_len,
+                                 state_slots=state_slots)
     elif kind == "rglru":
         y, c = rglru_mod.apply_rglru(p["rglru"], x, cfg, cache=cache,
-                                     make_cache=make_cache)
+                                     make_cache=make_cache, pos=pos,
+                                     valid_len=valid_len,
+                                     state_slots=state_slots)
     else:
         raise ValueError(kind)
     h = h + y
     if ffn == "dense":
         h = h + apply_mlp(p["mlp"], apply_norm(p["ln2"], h, cfg), cfg)
     elif ffn == "moe":
+        # decode/serve paths run dropless: the training-time capacity
+        # drop makes a token's output depend on its step's batchmates
+        # (and lets padded rows displace real tokens)
         y, aux_moe = moe_mod.apply_moe(p["moe"], apply_norm(p["ln2"], h, cfg),
-                                       cfg)
+                                       cfg,
+                                       dropless=cache is not None
+                                       or make_cache)
         h = h + y
         aux = aux + aux_moe
     return h, c, aux
@@ -151,7 +162,8 @@ def init_run(key, cfg, kind: str, ffn: str, n: int):
 
 
 def apply_run(rp, h, cfg, kind: str, ffn: str, *, positions, cache=None,
-              pos=None, valid_len=None, make_cache=False, cache_len=0):
+              pos=None, valid_len=None, state_slots=None, make_cache=False,
+              cache_len=0):
     """Scan h through a stacked run.  cache (if given) has leading L axis."""
     use_cache = cache is not None
 
@@ -162,7 +174,9 @@ def apply_run(rp, h, cfg, kind: str, ffn: str, *, positions, cache=None,
             lp, lc = xs, None
         hh, c, aux = apply_layer(lp, carry, cfg, kind, ffn,
                                  positions=positions, cache=lc, pos=pos,
-                                 valid_len=valid_len, make_cache=make_cache,
+                                 valid_len=valid_len,
+                                 state_slots=state_slots,
+                                 make_cache=make_cache,
                                  cache_len=cache_len)
         if c is None:
             c = jnp.zeros((), h.dtype)  # scan needs a concrete ys
@@ -255,7 +269,8 @@ def chunked_lm_ce(params, h, labels, cfg, *, mask_from: int = 0):
 
 
 def forward(params, batch, cfg, *, cache=None, pos=None, valid_len=None,
-            make_cache=False, cache_len=0, need_logits=True):
+            state_slots=None, make_cache=False, cache_len=0,
+            need_logits=True):
     """Returns (logits, new_cache, aux_loss).
 
     batch: {"tokens": (B,S)} (+ "image_embeds": (B,Si,D) for vlm).
@@ -285,6 +300,7 @@ def forward(params, batch, cfg, *, cache=None, pos=None, valid_len=None,
         rc = cache[f"run_{i}"] if cache is not None else None
         h, nc, a = apply_run(rp, h, cfg, kind, ffn, positions=positions,
                              cache=rc, pos=pos, valid_len=valid_len,
+                             state_slots=state_slots,
                              make_cache=make_cache, cache_len=cache_len)
         if new_cache is not None:
             new_cache[f"run_{i}"] = nc
@@ -295,42 +311,73 @@ def forward(params, batch, cfg, *, cache=None, pos=None, valid_len=None,
 
 
 def init_paged_cache(cfg, num_blocks: int, block_size: int, batch: int,
-                     blocks_per_seq: int, dtype=None):
-    """Paged decode state: per-layer K/V block pools shared by every
-    sequence, plus per-sequence block tables (identical across layers —
-    the serve engine rewrites them each step).
+                     blocks_per_seq: int, dtype=None,
+                     num_state_slots: int = 0):
+    """Paged per-layer decode state, by family:
 
-    Physical block 0 is the trash block: inactive batch slots point their
-    whole table at it, so their writes land somewhere harmless and their
-    reads are masked by position.
+      attn / local_attn  -> K/V block pools (num_blocks, block_size, ...)
+                            + per-sequence block tables
+      attn with MLA      -> *latent* block pools: compressed c_kv
+                            (kv_lora_rank) + shared rotary key per token —
+                            DeepSeek's cache-memory win survives paging
+      ssm / rglru        -> fixed-size per-slot recurrent state pools
+                            (num_state_slots, ...): conv window + SSD
+                            state / LRU hidden.  Not block-paged — the
+                            state is O(1) per sequence; a slot is a
+                            sequence's whole decode state.
+
+    Physical block 0 / state slot 0 is trash: inactive rows point there,
+    so their (masked) writes land somewhere harmless.
     """
     dtype = dtype or cfg.cdtype
-    if cfg.mla is not None:
-        raise NotImplementedError("paged cache: MLA latent KV not yet paged")
+    nslots = num_state_slots or batch + 1
     out = {}
     for i, (kind, ffn, n) in enumerate(runs_of(cfg)):
-        if kind not in ("attn", "local_attn"):
+        if kind in ("attn", "local_attn"):
+            if cfg.mla is not None and kind == "attn":
+                a = cfg.mla
+                rc = {"ckv": jnp.zeros((n, num_blocks, block_size,
+                                        a.kv_lora_rank), dtype),
+                      "krope": jnp.zeros((n, num_blocks, block_size,
+                                          a.qk_rope_head_dim), dtype)}
+            else:
+                rc = {"k": jnp.zeros((n, num_blocks, block_size,
+                                      cfg.num_kv_heads, cfg.head_dim),
+                                     dtype),
+                      "v": jnp.zeros((n, num_blocks, block_size,
+                                      cfg.num_kv_heads, cfg.head_dim),
+                                     dtype)}
+            rc["block_tables"] = jnp.zeros((n, batch, blocks_per_seq),
+                                           jnp.int32)
+        elif kind == "ssm":
+            single = ssm_mod.init_ssm_cache(cfg, nslots, dtype)
+            rc = jax.tree.map(
+                lambda x: jnp.zeros((n,) + x.shape, x.dtype), single)
+        elif kind == "rglru":
+            single = rglru_mod.init_rglru_cache(cfg, nslots, dtype)
+            rc = jax.tree.map(
+                lambda x: jnp.zeros((n,) + x.shape, x.dtype), single)
+        else:
             raise NotImplementedError(
                 f"paged cache: layer kind {kind!r} has no paged form")
-        out[f"run_{i}"] = {
-            "k": jnp.zeros((n, num_blocks, block_size, cfg.num_kv_heads,
-                            cfg.head_dim), dtype),
-            "v": jnp.zeros((n, num_blocks, block_size, cfg.num_kv_heads,
-                            cfg.head_dim), dtype),
-            "block_tables": jnp.zeros((n, batch, blocks_per_seq), jnp.int32),
-        }
+        out[f"run_{i}"] = rc
     return out
 
 
 def with_block_tables(cache, block_tables):
-    """Return ``cache`` with every run's block tables replaced by
-    ``block_tables`` (B, NB) — broadcast over the stacked layer axis."""
+    """Return ``cache`` with every block-pooled run's tables replaced by
+    ``block_tables`` (B, NB) — broadcast over the stacked layer axis.
+    Slot-state runs (ssm/rglru) carry no tables and pass through."""
     out = {}
     for run, rc in cache.items():
-        n = rc["k"].shape[0]
-        out[run] = {"k": rc["k"], "v": rc["v"],
-                    "block_tables": jnp.broadcast_to(
-                        block_tables, (n,) + block_tables.shape)}
+        if "block_tables" not in rc:
+            out[run] = rc
+            continue
+        n = rc["block_tables"].shape[0]
+        nc = {k: v for k, v in rc.items() if k != "block_tables"}
+        nc["block_tables"] = jnp.broadcast_to(
+            block_tables, (n,) + block_tables.shape)
+        out[run] = nc
     return out
 
 
@@ -351,20 +398,24 @@ def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg):
     tokens: (B, C) int32 — decode rows use only column 0, prefill rows
     carry a prompt chunk; block_tables: (B, NB) int32 per-row block
     tables (broadcast across layers inside the jit — cheaper than the
-    host materializing the broadcast every step); meta: (4, B) int32
+    host materializing the broadcast every step); meta: (5, B) int32
     packed per-row control inputs (one host->device transfer instead of
-    four):
+    five):
 
       meta[0] = pos       absolute position of the row's first token
       meta[1] = valid_len number of real tokens in the row (0 disables
                           the row: every KV write goes to the trash
-                          block, so a padded/stale row cannot clobber
-                          live cache)
+                          block and every recurrent-state write to the
+                          trash slot, so a padded/stale row cannot
+                          clobber live cache)
       meta[2] = src_slot  rows with src_slot >= 0 read their input
                           token from slot_buf[src_slot] instead of
                           tokens[:, 0]
       meta[3] = dst_slot  slot the sampled token is scattered to
                           (dst_slot < 0 routes to the spare slot S)
+      meta[4] = state_slot per-row index into the fixed-size recurrent
+                          state pools (ssm/rglru runs); 0 is the trash
+                          slot.  Ignored by pure block-pool families.
 
     slot_buf: (S+1,) int32 device-resident last-sampled-token-per-slot
     ring — the device-side feedback path that lets the host dispatch
@@ -374,7 +425,7 @@ def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg):
     cache).  Only the (B,)/(B,V) outputs ever ship to host — the
     (B, C, V) prefill logits block never leaves the device.
     """
-    pos, valid_len, src_slot, dst_slot = meta
+    pos, valid_len, src_slot, dst_slot, state_slot = meta
     cache = with_block_tables(cache, block_tables)
     wired = src_slot >= 0
     tok0 = jnp.where(wired, slot_buf[jnp.maximum(src_slot, 0)],
@@ -382,7 +433,7 @@ def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg):
     tokens = tokens.at[:, 0].set(tok0.astype(tokens.dtype))
     _, new_cache, _, h = forward(params, {"tokens": tokens}, cfg,
                                  cache=cache, pos=pos, valid_len=valid_len,
-                                 need_logits=False)
+                                 state_slots=state_slot, need_logits=False)
     # slice each row's frontier hidden state on device: logits are only
     # ever needed at the last real token (first generated token for a
     # prompt-completing prefill row, next token for a decode row)

@@ -8,11 +8,13 @@ model interface (Model.init_paged_cache / Model.paged_step).
   router               data-parallel replica placement over Topology axes
 """
 from repro.serve.engine import Engine, EngineConfig, RequestResult
-from repro.serve.kv_cache import BlockAllocator, PagedKVCache
+from repro.serve.kv_cache import (BlockAllocator, PagedKVCache,
+                                  StateSlotAllocator)
 from repro.serve.router import Replica, ReplicaRouter
 from repro.serve.scheduler import Request, RequestQueue, Scheduler
 
 __all__ = [
     "BlockAllocator", "Engine", "EngineConfig", "PagedKVCache", "Replica",
     "ReplicaRouter", "Request", "RequestQueue", "RequestResult", "Scheduler",
+    "StateSlotAllocator",
 ]

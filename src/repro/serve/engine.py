@@ -27,10 +27,20 @@ mixed prefill+decode rows:
 
 Because block tables, positions, and tokens are rebuilt for every call,
 rows carry no state between steps — a sequence's identity lives in its
-block table and its slot in the device token buffer.  Admission isn't
-tied to a decode row: the engine admits ``admission_lookahead``
-sequences beyond max_batch so a freshly finished row is backfilled by an
-already-prefilled ("ready") sequence with zero idle steps.
+block table, its recurrent-state slot (ssm/rglru families), and its slot
+in the device token buffer.  Admission isn't tied to a decode row: the
+engine admits ``admission_lookahead`` sequences beyond max_batch so a
+freshly finished row is backfilled by an already-prefilled ("ready")
+sequence with zero idle steps.
+
+Per-family paged state (``Model.paged_spec``): block-pool families
+(plain attention, MLA latent KV) page per-token state and may split
+prefill chunks into width-1 rows on mixed steps; slot-state families
+(ssm, rglru) keep O(1) recurrent state in fixed-size slots, so mixed
+steps keep chunk-wide rows (a token's state depends on the previous
+token *within the call*) and preemption relies on recompute — the
+replayed first chunk reads zeros because its pos is 0, never the
+evicted slot's stale state.
 """
 from __future__ import annotations
 
@@ -44,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer
-from repro.serve.kv_cache import PagedKVCache
+from repro.serve.kv_cache import PagedKVCache, StateSlotAllocator
 from repro.serve.scheduler import Request, RequestQueue, Scheduler
 
 
@@ -94,6 +104,15 @@ class EngineConfig:
                                     self.prefill_token_budget // 2)
         small = self.max_batch + self.prefill_chunk
         return sorted({full, half, small})
+
+    @property
+    def mixed_chunk_rows(self) -> int:
+        """Row count for mixed steps of slot-state families (ssm/rglru):
+        prefill chunks cannot split into width-1 rows (the recurrent
+        state of token i+1 depends on token i *within the call*), so the
+        mixed layout is chunk-wide rows — decode rows ride along with
+        valid_len=1."""
+        return self.max_batch + self.prefill_rows
 
     @property
     def decode_buckets(self) -> List[int]:
@@ -149,21 +168,32 @@ class Engine:
     """Continuous-batching engine; single data-parallel replica."""
 
     def __init__(self, model, params, cfg: EngineConfig = EngineConfig()):
-        if model.paged_step is None:
+        if model.paged_step is None or model.paged_spec is None:
             raise ValueError(
                 f"{model.cfg.name}: family {model.cfg.family!r} has no "
-                "paged-KV serving path")
+                "paged serving path")
+        self.spec = model.paged_spec
+        if not cfg.fused and self.spec.has_state:
+            raise ValueError(
+                "the unfused baseline path has no per-row state slots; "
+                "slot-state families (ssm/rglru) serve fused-only")
         self.model = model
         self.params = params
         self.cfg = cfg
+        # the host-side block accounting runs for EVERY family — for pure
+        # slot-state models (no device block pools) it still meters token
+        # capacity, so admission/preemption semantics are uniform across
+        # families and pool starvation forces the same recompute path
         self.kv = PagedKVCache(cfg.num_blocks, cfg.block_size,
                                cfg.blocks_per_seq)
+        self.state_slots = (StateSlotAllocator(cfg.num_slots + 1)
+                            if self.spec.has_state else None)
         self.scheduler = Scheduler(
             cfg.max_batch + cfg.admission_lookahead, cfg.prefill_chunk,
             cfg.prefill_token_budget, max_chunks_per_step=cfg.prefill_rows)
         self.cache = model.init_paged_cache(
             cfg.num_blocks, cfg.block_size, cfg.max_batch,
-            cfg.blocks_per_seq)
+            cfg.blocks_per_seq, num_state_slots=cfg.num_slots + 1)
         # cache + slot buffer are pure device state threaded through every
         # call; donating them lets XLA scatter into the KV pools in place
         # instead of copying the pools every step.  Note for the
@@ -227,6 +257,13 @@ class Engine:
 
     def _admit(self, req: Request) -> _Seq:
         seq = _Seq(req, slot=self._free_slots.pop())
+        if self.state_slots is not None:
+            # one state slot per admittable sequence — sized to num_slots,
+            # so a free token-buffer slot implies a free state slot
+            slot = self.state_slots.alloc(req.rid)
+            if slot is None:
+                raise RuntimeError("state-slot pool exhausted despite a "
+                                   "free token-buffer slot (engine bug)")
         self._live.append(seq)
         return seq
 
@@ -235,6 +272,8 @@ class Engine:
         self._live.remove(seq)
         self._free_slots.append(seq.slot)
         self.kv.free_seq(seq.req.rid)
+        if self.state_slots is not None:
+            self.state_slots.free_if_held(seq.req.rid)
         self.scheduler.forget(seq.req)
         self._first_token_times.pop(seq.req.rid, None)
         # tokens a preempted request generated pre-eviction live in the
@@ -260,6 +299,12 @@ class Engine:
             self._live.remove(victim)
             self._free_slots.append(victim.slot)
             self.kv.free_seq(victim.req.rid)
+            if self.state_slots is not None:
+                # the victim's recurrent state is abandoned in its slot;
+                # recompute mode replays the prompt (incl. generated
+                # tokens) through the chunked scan, and pos==0 on the
+                # first replayed chunk reads zeros, not the stale slot
+                self.state_slots.free_if_held(victim.req.rid)
             self.scheduler.preempt(victim.req, victim.out)
             rid = victim.req.rid
             if victim.prefill_done:
@@ -304,9 +349,10 @@ class Engine:
     # -- fused step ---------------------------------------------------------
 
     def _dispatch(self, tokens, meta, tables):
-        """One fused call.  tokens (B,C), meta (4,B) packed
-        pos/valid/src/dst, tables (B,NB) — three host->device transfers
-        total; the layer broadcast of the tables happens inside the jit."""
+        """One fused call.  tokens (B,C), meta (5,B) packed
+        pos/valid/src/dst/state_slot, tables (B,NB) — three host->device
+        transfers total; the layer broadcast of the tables happens inside
+        the jit."""
         self.stats["model_calls"] += 1
         toks, logits, self._slot_buf, self.cache = self._step_fn(
             self.params, self.cache, self._slot_buf, tokens, tables, meta)
@@ -371,7 +417,12 @@ class Engine:
         #                   width) while paying ONE dispatch.  Chunk
         #                   token i attends its siblings' KV because
         #                   every row's scatter lands before any row's
-        #                   gather within the call.
+        #                   gather within the call.  Slot-state families
+        #                   (ssm/rglru) can't split — a token's recurrent
+        #                   state depends on the previous token *within
+        #                   the call* — so their mixed layout keeps
+        #                   chunk-wide prefill rows and pads decode rows
+        #                   to the chunk width (valid_len=1).
         n_dec = len(active)
         n_pre = sum(ch.length for ch in plan)
         if n_pre == 0:
@@ -379,20 +430,25 @@ class Engine:
                               if k >= n_dec), 1
         elif n_dec == 0:
             rows, width = cfg.prefill_rows, cfg.prefill_chunk
-        else:
+        elif self.spec.width1_mixed:
             rows, width = min(k for k in cfg.mixed_buckets
                               if k >= n_dec + n_pre), 1
+        else:
+            rows, width = cfg.mixed_chunk_rows, cfg.prefill_chunk
         tokens = np.zeros((rows, width), np.int32)
-        meta = np.zeros((4, rows), np.int32)
-        meta[2:] = -1
-        pos, valid, src, dst = meta
+        meta = np.zeros((5, rows), np.int32)
+        meta[2:4] = -1
+        pos, valid, src, dst, state = meta
         rids: List[Optional[int]] = [None] * rows
         emits: List[Tuple[int, _Seq, bool]] = []
+        slot_of = (self.state_slots.slot_of if self.state_slots is not None
+                   else lambda rid: 0)
 
         for row, seq in enumerate(active):
             pos[row] = seq.next_pos
             valid[row] = 1
             rids[row] = seq.req.rid
+            state[row] = slot_of(seq.req.rid)
             dst[row] = seq.slot
             if cfg.temperature <= 0.0:
                 # greedy: the slot buffer always holds this sequence's
@@ -412,11 +468,12 @@ class Engine:
             self.stats["prefill_tokens"] += ch.length
             completes = ch.start + ch.length >= len(ch.req.prompt)
             chunk_tok = ch.req.prompt[ch.start:ch.start + ch.length]
-            if width > 1:                      # prefill-only: one row/chunk
+            if width > 1:                      # chunk-wide: one row/chunk
                 tokens[row, :ch.length] = chunk_tok
                 pos[row] = ch.start
                 valid[row] = ch.length
                 rids[row] = ch.req.rid
+                state[row] = slot_of(ch.req.rid)
                 if completes:
                     # prompt complete: the frontier logit is the first
                     # generated token
@@ -557,12 +614,16 @@ class Engine:
         shapes = [(b, 1) for b in self.cfg.decode_buckets]
         shapes += [(self.cfg.prefill_rows, self.cfg.prefill_chunk)]
         if self.cfg.fused:
-            shapes += [(b, 1) for b in self.cfg.mixed_buckets]
+            if self.spec.width1_mixed:
+                shapes += [(b, 1) for b in self.cfg.mixed_buckets]
+            else:
+                shapes += [(self.cfg.mixed_chunk_rows,
+                            self.cfg.prefill_chunk)]
         for rows, width in shapes:
             tables = self.kv.table_array([None] * rows)
             if self.cfg.fused:
-                meta = np.zeros((4, rows), np.int32)
-                meta[2:] = -1
+                meta = np.zeros((5, rows), np.int32)
+                meta[2:4] = -1
                 toks, _ = self._dispatch(np.zeros((rows, width), np.int32),
                                          meta, tables)
                 jax.block_until_ready(toks)

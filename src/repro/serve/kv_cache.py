@@ -1,14 +1,26 @@
-"""Paged KV-cache bookkeeping (host side).
+"""Paged decode-state bookkeeping (host side).
 
-The device state — per-layer K/V block pools — lives in the cache pytree
-built by ``Model.init_paged_cache``; this module owns the free-list
-allocator and the per-sequence logical->physical block tables that tell
-``paged_step`` where each sequence's tokens live.  Heterogeneous
-prompt/generation lengths share one preallocated pool instead of each
-request carrying its own ``cache_len`` buffer.
+The device state — per-layer K/V (or MLA latent) block pools and
+fixed-size recurrent state pools — lives in the cache pytree built by
+``Model.init_paged_cache``; this module owns the free-list allocators and
+the per-sequence logical->physical block tables that tell ``paged_step``
+where each sequence's tokens live.  Heterogeneous prompt/generation
+lengths share one preallocated pool instead of each request carrying its
+own ``cache_len`` buffer.
 
-Physical block 0 is never allocated: it is the trash block that inactive
-batch rows point at, so their (masked) writes can't corrupt live data.
+Two allocators, matching the two kinds of paged state:
+
+  * ``BlockAllocator`` — token-granular block pools that grow with the
+    sequence (plain K/V and MLA latent blocks page identically; only the
+    per-token payload differs);
+  * ``StateSlotAllocator`` — O(1)-per-sequence recurrent state (ssm SSD
+    state + conv window, rglru hidden + conv window).  A slot is a whole
+    sequence's decode state; there is nothing to grow, so allocation is
+    one slot per live sequence.
+
+Physical block 0 / state slot 0 is never allocated: it is the trash
+target that inactive rows point at, so their (masked) writes can't
+corrupt live data.
 """
 from __future__ import annotations
 
@@ -17,6 +29,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 TRASH_BLOCK = 0
+TRASH_SLOT = 0
 
 
 class BlockAllocator:
@@ -60,6 +73,55 @@ class BlockAllocator:
                 raise ValueError(f"double/foreign free of block {b}")
             self._allocated.remove(b)
             self._free.append(b)
+
+
+class StateSlotAllocator:
+    """LIFO free-list over ``num_slots`` fixed-size recurrent-state slots.
+
+    Slot 0 is the trash slot (stale/padded engine rows write there); every
+    live sequence holds exactly one slot for its whole lifetime.  Same
+    conservation invariants as ``BlockAllocator``, property-tested the
+    same way.
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots < 2:
+            raise ValueError("need >= 2 slots (slot 0 is the trash slot)")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots - 1, 0, -1))
+        self._owner: Dict[int, int] = {}          # rid -> slot
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, rid: int) -> Optional[int]:
+        """One slot for sequence ``rid``; None if the pool is exhausted.
+        Idempotent: a rid that already holds a slot gets the same one."""
+        if rid in self._owner:
+            return self._owner[rid]
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._owner[rid] = slot
+        return slot
+
+    def slot_of(self, rid: Optional[int]) -> int:
+        """The slot held by ``rid`` (TRASH_SLOT for None/unknown rids —
+        an inactive row's state writes must land in the trash)."""
+        if rid is None:
+            return TRASH_SLOT
+        return self._owner.get(rid, TRASH_SLOT)
+
+    def free(self, rid: int) -> None:
+        slot = self._owner.pop(rid, None)
+        if slot is None:
+            raise ValueError(f"free of rid {rid} holding no slot")
+        self._free.append(slot)
+
+    def free_if_held(self, rid: int) -> None:
+        if rid in self._owner:
+            self.free(rid)
 
 
 class PagedKVCache:
