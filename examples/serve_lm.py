@@ -4,9 +4,13 @@ Requests stream in through a thread-safe RequestQueue (host-side
 "tokenization" overlapped with device decode, HostLoader-style); the
 continuous-batching engine admits them mid-flight, interleaves budgeted
 prefill chunks with batched decode over the paged KV cache, and evicts
-finished sequences as their slots free.
+finished sequences as their slots free.  With ``--replicas N`` the
+requests fan out token-weighted over N engines, one per fast-fabric
+device slice (ServeCluster).
 
     PYTHONPATH=src python -m examples.serve_lm [--arch qwen2-1.5b]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m examples.serve_lm --replicas 2
 """
 import argparse
 import dataclasses
@@ -18,7 +22,8 @@ import numpy as np
 
 from repro.configs.base import get_config, smoke_variant
 from repro.models.model import build_model
-from repro.serve import Engine, EngineConfig, Request, RequestQueue
+from repro.serve import (Engine, EngineConfig, Request, RequestQueue,
+                         ServeCluster)
 
 
 def main():
@@ -33,6 +38,8 @@ def main():
                     help="max new tokens (lengths are mixed)")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas, one per device slice")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch)).replace(mtp_depth=0)
@@ -49,11 +56,15 @@ def main():
     ecfg = dataclasses.replace(
         ecfg, num_blocks=(ecfg.max_batch + ecfg.admission_lookahead)
         * ecfg.blocks_per_seq + 1)
-    eng = Engine(model, params, ecfg)
-    eng.warmup()
+    if args.replicas > 1:
+        server = ServeCluster.for_replicas(model, params, ecfg,
+                                           num_replicas=args.replicas)
+    else:
+        server = Engine(model, params, ecfg)
+    server.warmup()
     print(f"serving {cfg.name}: {args.requests} requests, "
-          f"{args.batch} decode rows, paged KV "
-          f"({eng.cfg.num_blocks} x {eng.cfg.block_size}-token blocks)")
+          f"{args.replicas} replica(s) x {args.batch} decode rows, "
+          f"paged KV ({ecfg.num_blocks} x {ecfg.block_size}-token blocks)")
 
     rng = np.random.default_rng(args.seed)
     queue = RequestQueue(maxsize=args.requests)
@@ -73,7 +84,7 @@ def main():
     t0 = time.perf_counter()
     producer.start()
     with queue:
-        results = eng.run(request_queue=queue)
+        results = server.run(request_queue=queue)
     producer.join()
     wall = time.perf_counter() - t0
 
@@ -83,11 +94,15 @@ def main():
               f"  first-token={(r.first_token_time - t0)*1e3:6.1f} ms"
               f"  tokens={r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
     tokens = sum(len(r.tokens) for r in results.values())
-    occ = (eng.stats["decode_active_slot_steps"]
-           / max(eng.stats["decode_slot_steps"], 1))
+    stats = server.stats
+    occ = (stats["decode_active_slot_steps"]
+           / max(stats["decode_slot_steps"], 1))
+    per_rep = ("" if args.replicas == 1 else
+               "  per-replica tokens=" + str(
+                   [e.stats["generated_tokens"] for e in server.engines]))
     print(f"{tokens} tokens in {wall*1e3:.0f} ms "
           f"({tokens / wall:,.0f} tok/s), decode occupancy {occ:.2f}, "
-          f"{eng.stats['preemptions']} preemptions")
+          f"{stats['preemptions']} preemptions{per_rep}")
 
 
 if __name__ == "__main__":

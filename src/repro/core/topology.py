@@ -45,3 +45,24 @@ class Topology:
         if g is None or g == data_size:
             return None
         return [list(range(r, data_size, g)) for r in range(g)]
+
+    def device_slices(self, num_devices: int,
+                      num_pods: int = 1) -> List[List[int]]:
+        """Partition ``num_devices`` flat device ranks into one slice per
+        fast-fabric group: the slow axis (pods) splits first, then each
+        pod's ranks split into intra-group-size fast groups.  Serving
+        places one engine replica per slice (pod-major, groups inner —
+        the replica_id order of ``serve.ReplicaRouter``); training maps
+        the same groups to the phase-1 reduce."""
+        if num_pods < 1:
+            raise ValueError(f"num_pods must be >= 1, got {num_pods}")
+        if num_devices % num_pods:
+            raise ValueError(f"{num_devices} devices not divisible into "
+                             f"{num_pods} pods")
+        per_pod = num_devices // num_pods
+        self.group_count(per_pod)        # validates divisibility
+        groups = self.phase1_groups(per_pod)
+        if groups is None:
+            groups = [list(range(per_pod))]
+        return [[pod * per_pod + r for r in g]
+                for pod in range(num_pods) for g in groups]

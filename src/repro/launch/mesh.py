@@ -46,5 +46,21 @@ def make_host_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     return make_mesh(shape, axes)
 
 
+def replica_slices(topology, num_pods: int = 1, devices=None):
+    """One ``jax.Device`` slice per serving replica.
+
+    Partitions the visible devices along the LSGD axes — the slow axis
+    (pods) first, then each pod's devices into fast-fabric groups
+    (``topology.device_slices``) — and returns them pod-major, fast
+    groups inner: index ``i`` is the device territory of the
+    ``ReplicaRouter``'s replica ``i``.  On CPU CI these are the forced
+    virtual devices (``--xla_force_host_platform_device_count``); on
+    real hardware they are honest hardware slices — either way each
+    replica's per-token traffic stays inside its slice."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    return [tuple(devices[i] for i in grp)
+            for grp in topology.device_slices(len(devices), num_pods)]
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -52,9 +52,18 @@ class PagedSpec:
       has_state    any layer keeps fixed-size per-slot recurrent state
                    (ssm conv+SSD state, rglru conv+hidden) — the engine
                    assigns each sequence a state slot
+      reclaim_window
+                   positions after which a block is dead for EVERY
+                   block-pooled layer: the max sliding window when all
+                   such layers are windowed (rglru hybrids, swa
+                   variants), else 0 (any full-attention layer keeps
+                   every block live forever — no reclamation).  The
+                   engine's PagedKVCache frees leading blocks past this
+                   window as the frontier advances.
     """
     has_blocks: bool
     has_state: bool
+    reclaim_window: int = 0
 
     @property
     def width1_mixed(self) -> bool:
@@ -140,9 +149,13 @@ def build_model(cfg: ModelConfig) -> Model:
             prefill=functools.partial(encdec.prefill, cfg=cfg),
             input_specs=functools.partial(_audio_input_specs, cfg))
     kinds = cfg.layer_kinds()
+    windows = [transformer._layer_window(cfg, k) for k in kinds
+               if k in ("attn", "local_attn")]
     spec = PagedSpec(
-        has_blocks=any(k in ("attn", "local_attn") for k in kinds),
-        has_state=any(k in ("ssm", "rglru") for k in kinds))
+        has_blocks=bool(windows),
+        has_state=any(k in ("ssm", "rglru") for k in kinds),
+        reclaim_window=(max(windows)
+                        if windows and all(w > 0 for w in windows) else 0))
     return Model(
         cfg=cfg,
         init=functools.partial(transformer.init_params, cfg=cfg),

@@ -2,11 +2,17 @@
 model interface (Model.init_paged_cache / Model.paged_step).
 
   engine.Engine        one fused mixed prefill+decode call per step,
-                       device-side greedy sampling, pipelined dispatch
-  kv_cache             block pool allocator + per-sequence block tables
+                       device-side greedy sampling, pipelined dispatch;
+                       pins to a mesh slice's lead device
+  kv_cache             block pool allocator + per-sequence block tables;
+                       sliding-window block reclamation
   scheduler            FCFS policy with a prefill-token budget; RequestQueue
-  router               data-parallel replica placement over Topology axes
+  router               token-weighted replica placement over Topology axes
+  dispatcher           ServeCluster: one Engine per fast-fabric device
+                       slice + worker threads; the slow layer carries
+                       only admission/results/metrics
 """
+from repro.serve.dispatcher import ServeCluster
 from repro.serve.engine import Engine, EngineConfig, RequestResult
 from repro.serve.kv_cache import (BlockAllocator, PagedKVCache,
                                   StateSlotAllocator)
@@ -16,5 +22,5 @@ from repro.serve.scheduler import Request, RequestQueue, Scheduler
 __all__ = [
     "BlockAllocator", "Engine", "EngineConfig", "PagedKVCache", "Replica",
     "ReplicaRouter", "Request", "RequestQueue", "RequestResult", "Scheduler",
-    "StateSlotAllocator",
+    "ServeCluster", "StateSlotAllocator",
 ]

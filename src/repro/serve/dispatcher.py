@@ -1,0 +1,262 @@
+"""Multi-replica serving frontend: LSGD's two layers, executed.
+
+The paper's topology is a fast intra-group layer (workers on cheap
+fabric) under a slow inter-group layer (communicators) that only carries
+infrequent coarse traffic.  ``ServeCluster`` is that structure as a
+serving system, not a placement diagram:
+
+  * each *fast-fabric* device slice (``launch.mesh.replica_slices`` —
+    one slice per ``Topology`` fast group, pod-major) gets its own
+    ``Engine`` with its own paged cache, block allocator, and committed
+    params copy; ALL per-token traffic — block-table rebuilds, KV
+    scatter/gather, sampled-token feedback — stays inside the slice,
+    driven by a dedicated worker thread;
+  * the dispatcher is the *slow* layer: it carries only admission
+    (token-weighted fan-out through ``ReplicaRouter``), completed
+    ``RequestResult``s, and metrics.  Nothing per-token ever crosses
+    it, mirroring how the phase-2 all-reduce never sits on the training
+    hot path.
+
+Backpressure closes the loop: routing weights requests by outstanding
+prompt+decode tokens, and when every replica is past
+``capacity_tokens`` the submitting thread blocks until a completion
+releases weight — admission control at the slow layer, token costs
+metered where they accrue.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.topology import Topology
+from repro.launch.mesh import replica_slices
+from repro.serve.engine import Engine, EngineConfig, RequestResult
+from repro.serve.router import ReplicaRouter
+from repro.serve.scheduler import Request, RequestQueue
+
+
+class ServeCluster:
+    """One Engine per fast-fabric device slice + the dispatcher over
+    them.  Use as a context manager or call ``close()`` + ``join()``."""
+
+    def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
+                 topology: Optional[Topology] = None, num_pods: int = 1,
+                 devices=None, slices: Optional[List[Tuple]] = None,
+                 capacity_tokens: Optional[int] = None):
+        if slices is None:
+            topology = topology or Topology()
+            devices = (list(jax.devices()) if devices is None
+                       else list(devices))
+            slices = replica_slices(topology, num_pods, devices)
+            data_size = len(devices) // num_pods
+        else:
+            # explicit slices (the virtual fallback of ``for_replicas``):
+            # the router grid degenerates to one single-device pod per
+            # slice — placement bookkeeping still 1:1 with engines
+            topology, num_pods, data_size = Topology(), len(slices), 1
+        self.router = ReplicaRouter(topology, num_pods, data_size,
+                                    capacity_tokens=capacity_tokens)
+        if self.router.num_replicas != len(slices):
+            raise ValueError(
+                f"replica grid ({self.router.num_replicas}) != device "
+                f"slices ({len(slices)})")
+        self.slices = slices
+        self.engines = [Engine(model, params, cfg, devices=s)
+                        for s in slices]
+        self._queues = [RequestQueue() for _ in slices]
+        self._threads: List[threading.Thread] = []
+        self._results: Dict[int, RequestResult] = {}
+        self._cancelled: set = set()
+        self._picked: set = set()        # rids an engine has accepted
+        self._errors: List[BaseException] = []
+        self._cv = threading.Condition()
+        self._started = False
+
+    @classmethod
+    def for_replicas(cls, model, params, cfg: EngineConfig = EngineConfig(),
+                     num_replicas: int = 1, devices=None, **kw
+                     ) -> "ServeCluster":
+        """``num_replicas`` engines over the visible devices: honest
+        disjoint slices when the device count divides evenly (each slice
+        is one fast-fabric group), round-robin shared single-device
+        slices otherwise (CPU smoke on a 1-device host)."""
+        devices = list(jax.devices()) if devices is None else list(devices)
+        n = len(devices)
+        if num_replicas <= n and n % num_replicas == 0:
+            topo = Topology(intra_group_size=n // num_replicas)
+            return cls(model, params, cfg, topology=topo, devices=devices,
+                       **kw)
+        slices = [(devices[i % n],) for i in range(num_replicas)]
+        return cls(model, params, cfg, slices=slices, **kw)
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.engines)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile every engine's shapes on its own device before traffic
+        (per-device executables; the shared ``Model.jit_cache`` wrapper
+        means one trace, one compile per distinct device placement)."""
+        for e in self.engines:
+            e.warmup()
+
+    def start(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        for i, (eng, q) in enumerate(zip(self.engines, self._queues)):
+            t = threading.Thread(target=self._worker, args=(eng, q),
+                                 name=f"serve-replica-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def close(self) -> None:
+        """Close admission.  Requests already routed but sitting in a
+        queue no worker will ever run (cluster never started, or THAT
+        replica's worker died) are drained and their router weight
+        released — a routed-but-never-picked-up request must not leak
+        load.  Healthy replicas keep their queues: their workers drain
+        and serve the remainder before exiting."""
+        for q in self._queues:
+            q.close()
+        with self._cv:
+            for i, q in enumerate(self._queues):
+                alive = (self._started and i < len(self._threads)
+                         and self._threads[i].is_alive())
+                if not alive:
+                    for req in q.drain():
+                        self.router.release(req.rid)
+            self._cv.notify_all()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for t in self._threads:
+            t.join(timeout)
+        if self._errors:
+            raise self._errors[0]
+
+    def __enter__(self) -> "ServeCluster":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        if not any(exc):
+            self.join()
+        return False
+
+    # -- admission (the slow layer) -----------------------------------------
+
+    def submit(self, req: Request, timeout: Optional[float] = None) -> int:
+        """Route ``req`` token-weighted and hand it to its replica's
+        queue.  Blocks while every replica is saturated (backpressure);
+        returns the replica_id it landed on."""
+        weight = int(req.prompt.size) + req.max_new_tokens
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            replica = self.router.route(req.rid, tokens=weight)
+            while replica is None:
+                if self._errors:
+                    raise self._errors[0]
+                wait = (None if deadline is None
+                        else deadline - time.monotonic())
+                if wait is not None and wait <= 0:
+                    raise TimeoutError(
+                        f"request {req.rid}: every replica saturated for "
+                        f"{timeout}s (capacity_tokens="
+                        f"{self.router.capacity_tokens})")
+                self._cv.wait(wait)
+                replica = self.router.route(req.rid, tokens=weight)
+        try:
+            self._queues[replica.replica_id].submit(req)
+        except BaseException:
+            # admission refused (queue closed mid-submit): the routed
+            # weight must not leak
+            with self._cv:
+                self.router.release(req.rid)
+                self._cv.notify_all()
+            raise
+        return replica.replica_id
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a routed request no engine has picked up yet.
+        Idempotent; releases the router weight immediately.  Returns
+        False if an engine already accepted the request (it will run to
+        completion and keep its weight until then) or it already
+        finished — cancellation only intercepts the queue, it never
+        claws back in-flight work."""
+        with self._cv:
+            if rid in self._picked or rid in self._results:
+                return False
+            self._cancelled.add(rid)
+            self.router.release(rid)
+            self._cv.notify_all()
+        return True
+
+    # -- the fast layer (one thread per replica) ----------------------------
+
+    def _worker(self, eng: Engine, q: RequestQueue) -> None:
+        try:
+            while True:
+                for req in q.drain():
+                    with self._cv:
+                        dropped = req.rid in self._cancelled
+                        if not dropped:
+                            self._picked.add(req.rid)
+                    if not dropped:
+                        eng.submit(req)
+                if not eng.has_work:
+                    if q.exhausted:
+                        return
+                    time.sleep(0.0005)   # idle: wait for admissions
+                    continue
+                for res in eng.step():
+                    with self._cv:
+                        self._results[res.rid] = res
+                        self.router.release(res.rid)
+                        self._cv.notify_all()
+        except BaseException as e:        # surface engine crashes to join()
+            with self._cv:
+                self._errors.append(e)
+                self._cv.notify_all()
+
+    # -- convenience --------------------------------------------------------
+
+    def run(self, requests: Sequence[Request] = (),
+            request_queue: Optional[RequestQueue] = None
+            ) -> Dict[int, RequestResult]:
+        """Serve ``requests`` (and/or a client-facing queue) to
+        completion and return {rid: RequestResult}."""
+        self.start()
+        for r in requests:
+            self.submit(r)
+        if request_queue is not None:
+            while not request_queue.exhausted:
+                for r in request_queue.drain():
+                    self.submit(r)
+                time.sleep(0.0005)
+        self.close()
+        self.join()
+        return self.results()
+
+    def results(self) -> Dict[int, RequestResult]:
+        with self._cv:
+            return dict(self._results)
+
+    def loads(self) -> Dict[int, int]:
+        with self._cv:
+            return self.router.loads()
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Cluster totals (sum over replicas); per-replica detail lives
+        on each engine."""
+        out: Dict[str, int] = {}
+        for e in self.engines:
+            for k, v in e.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out

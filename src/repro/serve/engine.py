@@ -165,9 +165,22 @@ class _Inflight:
 
 
 class Engine:
-    """Continuous-batching engine; single data-parallel replica."""
+    """Continuous-batching engine; single data-parallel replica.
 
-    def __init__(self, model, params, cfg: EngineConfig = EngineConfig()):
+    ``devices`` pins the replica to a mesh slice (one fast-fabric group
+    from ``launch.mesh.replica_slices``): params, cache, and the token
+    slot buffer are committed to the slice's lead device, so every
+    ``paged_step`` — and the host->device transfer of tokens/meta/tables
+    it implies — runs there and nowhere else.  Multiple engines on
+    disjoint slices execute concurrently (``serve.ServeCluster`` drives
+    one worker thread per replica); sharding the model ACROSS a
+    multi-device slice (tensor parallel serving) is a follow-on — today
+    the slice's lead device carries the compute and the rest of the
+    slice is reserved territory.  ``devices=None`` keeps the PR-3
+    behaviour: whatever device JAX defaults to."""
+
+    def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
+                 devices: Optional[Sequence] = None):
         if model.paged_step is None or model.paged_spec is None:
             raise ValueError(
                 f"{model.cfg.name}: family {model.cfg.family!r} has no "
@@ -178,14 +191,23 @@ class Engine:
                 "the unfused baseline path has no per-row state slots; "
                 "slot-state families (ssm/rglru) serve fused-only")
         self.model = model
+        self.devices = tuple(devices) if devices else None
+        self.device = self.devices[0] if self.devices else None
+        if self.device is not None:
+            # each replica owns a full copy of the params on its slice
+            params = jax.device_put(params, self.device)
         self.params = params
         self.cfg = cfg
         # the host-side block accounting runs for EVERY family — for pure
         # slot-state models (no device block pools) it still meters token
         # capacity, so admission/preemption semantics are uniform across
-        # families and pool starvation forces the same recompute path
-        self.kv = PagedKVCache(cfg.num_blocks, cfg.block_size,
-                               cfg.blocks_per_seq)
+        # families and pool starvation forces the same recompute path.
+        # When every block-pooled layer is windowed, blocks that fall out
+        # of the window are reclaimed as the frontier advances (pure
+        # slot-state metering keeps window=0: its "blocks" are tokens).
+        self.kv = PagedKVCache(
+            cfg.num_blocks, cfg.block_size, cfg.blocks_per_seq,
+            window=self.spec.reclaim_window if self.spec.has_blocks else 0)
         self.state_slots = (StateSlotAllocator(cfg.num_slots + 1)
                             if self.spec.has_state else None)
         self.scheduler = Scheduler(
@@ -194,6 +216,11 @@ class Engine:
         self.cache = model.init_paged_cache(
             cfg.num_blocks, cfg.block_size, cfg.max_batch,
             cfg.blocks_per_seq, num_state_slots=cfg.num_slots + 1)
+        if self.device is not None:
+            # commit the device state to the replica's slice; committed
+            # operands pin every jit dispatch (and the np input
+            # transfers) to that device
+            self.cache = jax.device_put(self.cache, self.device)
         # cache + slot buffer are pure device state threaded through every
         # call; donating them lets XLA scatter into the KV pools in place
         # instead of copying the pools every step.  Note for the
@@ -216,6 +243,8 @@ class Engine:
             jax.jit(model.paged_step_logits, donate_argnums=(1,)))
             if not cfg.fused else None)
         self._slot_buf = jnp.zeros((cfg.num_slots + 1,), jnp.int32)
+        if self.device is not None:
+            self._slot_buf = jax.device_put(self._slot_buf, self.device)
         self._free_slots: List[int] = list(range(cfg.num_slots - 1, -1, -1))
         self._live: List[_Seq] = []     # admission (FCFS) order
         self._pending: Deque[_Inflight] = deque()
@@ -374,8 +403,8 @@ class Engine:
                 # one — growing its table now would hand the just-freed
                 # blocks straight back to the dead rid
                 continue
-            while not self.kv.ensure_capacity(seq.req.rid,
-                                              seq.next_pos + 1):
+            while not self.kv.ensure_capacity(seq.req.rid, seq.next_pos + 1,
+                                              query_start=seq.next_pos):
                 if self._pending:
                     # finished-but-unfetched sequences may be holding
                     # blocks; materialize them before sacrificing a
@@ -571,8 +600,8 @@ class Engine:
         for seq in active:
             if seq not in self._live:   # evicted by an earlier preemption
                 continue
-            while not self.kv.ensure_capacity(seq.req.rid,
-                                              seq.next_pos + 1):
+            while not self.kv.ensure_capacity(seq.req.rid, seq.next_pos + 1,
+                                              query_start=seq.next_pos):
                 if not self._preempt_one(exclude_rid=seq.req.rid):
                     raise RuntimeError(
                         "KV pool too small for a single sequence; raise "

@@ -125,24 +125,56 @@ class StateSlotAllocator:
 
 
 class PagedKVCache:
-    """Block tables for live sequences + the allocator behind them."""
+    """Block tables for live sequences + the allocator behind them.
+
+    With ``window > 0`` (the model's reclaim window: the largest sliding
+    window when EVERY block-pooled layer is windowed), leading blocks
+    that fell entirely out of the attention window are freed as the
+    query frontier advances: logical block ``b`` covers positions
+    ``[b*bs, (b+1)*bs)`` and no query at position ``q >= query_start``
+    can attend ``kpos <= q - window``, so once
+    ``(b+1)*bs - 1 <= query_start - window`` the block is dead for
+    every future step.  The freed entry stays in the table as a
+    TRASH_BLOCK placeholder — logical slot ``b`` must keep its index so
+    the device-side position math is untouched; gathers of a trashed
+    slot read garbage the window mask already discards.  Long
+    sliding-window generations therefore hold O(window) pool blocks
+    instead of O(generated).
+    """
 
     def __init__(self, num_blocks: int, block_size: int,
-                 blocks_per_seq: int):
+                 blocks_per_seq: int, window: int = 0):
         self.allocator = BlockAllocator(num_blocks, block_size)
         self.block_size = block_size
         self.blocks_per_seq = blocks_per_seq
+        self.window = window
         self._tables: Dict[int, List[int]] = {}
 
-    def ensure_capacity(self, rid: int, num_tokens: int) -> bool:
+    def ensure_capacity(self, rid: int, num_tokens: int,
+                        query_start: Optional[int] = None) -> bool:
         """Grow sequence ``rid``'s table to cover ``num_tokens`` positions.
-        Returns False (state unchanged) if the pool is exhausted."""
+        Returns False — no growth, though out-of-window blocks may have
+        been reclaimed (that mutation is the point: freeing dead blocks
+        is what gives a starved retry a chance) — if the pool cannot
+        cover the remainder.
+
+        ``query_start`` is the lowest position this step's queries for
+        ``rid`` will attend FROM (the decode position, or a prefill
+        chunk's start); with a sliding window it lets leading
+        out-of-window blocks be reclaimed before the growth is sized,
+        so a starved pool frees dead blocks instead of preempting."""
         need = self.allocator.blocks_for(num_tokens)
         if need > self.blocks_per_seq:
             raise ValueError(
                 f"sequence needs {need} blocks > blocks_per_seq="
                 f"{self.blocks_per_seq} (raise engine max_seq_len)")
         have = self._tables.setdefault(rid, [])
+        if self.window and query_start is not None:
+            dead = max(0, query_start - self.window + 1) // self.block_size
+            for b in range(min(dead, len(have))):
+                if have[b] != TRASH_BLOCK:
+                    self.allocator.free([have[b]])
+                    have[b] = TRASH_BLOCK
         grow = need - len(have)
         if grow <= 0:
             return True
@@ -155,10 +187,15 @@ class PagedKVCache:
     def free_seq(self, rid: int) -> None:
         blocks = self._tables.pop(rid, None)
         if blocks:
-            self.allocator.free(blocks)
+            live = [b for b in blocks if b != TRASH_BLOCK]
+            if live:
+                self.allocator.free(live)
 
     def num_blocks_of(self, rid: int) -> int:
-        return len(self._tables.get(rid, ()))
+        """Pool blocks ``rid`` actually holds (reclaimed window
+        placeholders excluded)."""
+        return sum(1 for b in self._tables.get(rid, ())
+                   if b != TRASH_BLOCK)
 
     def table_row(self, rid: Optional[int]) -> np.ndarray:
         """(blocks_per_seq,) int32 row; unassigned tail (and rows for

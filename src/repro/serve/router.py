@@ -6,14 +6,23 @@ Serving reuses the training topology's fabric distinction
 cheap intra-node interconnect hold one model copy and batch together),
 while the *slow* axis (``pod``) only separates replicas, exactly like it
 only carries the infrequent phase-2 all-reduce in training.  The router
-is the host-side front door: requests go to the least-loaded replica,
-FCFS on ties, so heavy traffic spreads without any cross-replica
-(slow-fabric) coordination on the hot path.
+is the host-side front door: requests go to the replica with the fewest
+outstanding *tokens* (prompt + requested generation — a long-form
+request weighs what it costs, not 1), lowest replica id on ties, so
+heavy traffic spreads without any cross-replica (slow-fabric)
+coordination on the hot path.  ``ServeCluster``
+(``repro.serve.dispatcher``) turns this placement into actual execution:
+one Engine per device slice, fed by per-replica worker threads.
+
+Bookkeeping contract (property-tested): loads never go negative, the sum
+of loads equals the outstanding routed weight, and ``route`` /
+``complete`` / ``release`` compose in any order — releasing an unknown
+or already-released rid is a no-op, never a crash.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.topology import Topology
 
@@ -27,9 +36,13 @@ class Replica:
 
 
 class ReplicaRouter:
-    """Least-loaded routing over the replica grid implied by a Topology."""
+    """Token-weighted least-loaded routing over the replica grid implied
+    by a Topology (pod-major, fast-axis groups inner — the same order
+    ``launch.mesh.replica_slices`` emits device slices in, so
+    ``replica_id`` indexes both)."""
 
-    def __init__(self, topology: Topology, num_pods: int, data_size: int):
+    def __init__(self, topology: Topology, num_pods: int, data_size: int,
+                 capacity_tokens: Optional[int] = None):
         groups = topology.phase1_groups(data_size)
         if groups is None:
             groups = [list(range(data_size))]
@@ -39,27 +52,56 @@ class ReplicaRouter:
                 self.replicas.append(Replica(
                     replica_id=len(self.replicas), pod=pod, group=gi,
                     devices=tuple(g)))
+        # backpressure threshold: a loaded replica refuses work past this
+        # many outstanding tokens (None = unbounded).  An idle replica
+        # always accepts, so one oversized request can't deadlock.
+        self.capacity_tokens = capacity_tokens
         self._load: Dict[int, int] = {r.replica_id: 0 for r in self.replicas}
-        self._assignment: Dict[int, int] = {}   # request rid -> replica_id
+        self._assignment: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, weight)
 
     @property
     def num_replicas(self) -> int:
         return len(self.replicas)
 
-    def route(self, rid: int) -> Replica:
-        """Assign request ``rid`` to the least-loaded replica (lowest id
-        on ties, so placement is deterministic)."""
+    def route(self, rid: int, tokens: int = 1) -> Optional[Replica]:
+        """Assign request ``rid`` to the replica with the fewest
+        outstanding tokens (lowest id on ties, so placement is
+        deterministic).  ``tokens`` is the request's weight — its
+        outstanding prompt+decode tokens.  Returns None when every
+        replica is saturated (``capacity_tokens``): backpressure, the
+        caller should wait for a release and retry.  Re-routing an
+        already-assigned rid returns its existing placement."""
         if rid in self._assignment:
-            return self.replicas[self._assignment[rid]]
+            return self.replicas[self._assignment[rid][0]]
         best = min(self.replicas,
                    key=lambda r: (self._load[r.replica_id], r.replica_id))
-        self._assignment[rid] = best.replica_id
-        self._load[best.replica_id] += 1
+        load = self._load[best.replica_id]
+        if (self.capacity_tokens is not None and load > 0
+                and load + tokens > self.capacity_tokens):
+            return None
+        self._assignment[rid] = (best.replica_id, tokens)
+        self._load[best.replica_id] += tokens
         return best
 
+    def release(self, rid: int) -> None:
+        """Drop ``rid``'s assignment and return its weight to the
+        replica.  Idempotent: unknown or already-released rids are
+        no-ops, so completion, cancellation, and queue-drain paths can
+        all call it without coordinating."""
+        entry = self._assignment.pop(rid, None)
+        if entry is None:
+            return
+        replica_id, weight = entry
+        self._load[replica_id] -= weight
+
     def complete(self, rid: int) -> None:
-        replica_id = self._assignment.pop(rid)
-        self._load[replica_id] -= 1
+        """A routed request finished; same semantics as ``release``."""
+        self.release(rid)
 
     def loads(self) -> Dict[int, int]:
+        """Outstanding routed tokens per replica."""
         return dict(self._load)
+
+    def outstanding(self) -> int:
+        """Requests currently routed and not yet released."""
+        return len(self._assignment)

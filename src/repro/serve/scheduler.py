@@ -155,7 +155,8 @@ class Scheduler:
             length = min(self.prefill_chunk, len(req.prompt) - done, budget)
             if length <= 0:
                 continue
-            if not kv.ensure_capacity(req.rid, done + length):
+            if not kv.ensure_capacity(req.rid, done + length,
+                                      query_start=done):
                 continue                      # pool full; retry next step
             plan.append(PrefillChunk(req, done, length))
             self._progress[req.rid] += length

@@ -1,0 +1,70 @@
+"""Hypothesis property tests for the serving router's bookkeeping
+contract: any interleaving of route/complete/release over colliding
+rids keeps loads non-negative, keeps the load sum equal to the
+outstanding routed weight, and never throws.  (A seeded random-walk
+fallback runs in test_serve.py when hypothesis is absent.)"""
+import pytest
+pytest.importorskip("hypothesis")  # degrade to skips, not a crash
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import Topology
+from repro.serve import ReplicaRouter
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["route", "complete", "release"]),
+              st.integers(0, 7),           # rid: small range forces reuse
+              st.integers(1, 99)),         # token weight
+    max_size=60)
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops=OPS, num_pods=st.sampled_from([1, 2]),
+       group=st.sampled_from([1, 2, 4]))
+def test_router_invariants_under_any_op_order(ops, num_pods, group):
+    router = ReplicaRouter(Topology(intra_group_size=group),
+                           num_pods=num_pods, data_size=4)
+    outstanding = {}
+    for op, rid, w in ops:
+        if op == "route":
+            assert router.route(rid, tokens=w) is not None
+            outstanding.setdefault(rid, w)   # re-route keeps old weight
+        elif op == "complete":
+            router.complete(rid)
+            outstanding.pop(rid, None)
+        else:
+            router.release(rid)
+            outstanding.pop(rid, None)
+        loads = router.loads()
+        assert all(v >= 0 for v in loads.values())
+        assert sum(loads.values()) == sum(outstanding.values())
+        assert router.outstanding() == len(outstanding)
+    for rid in list(outstanding):
+        router.release(rid)
+    assert sum(router.loads().values()) == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=OPS, capacity=st.integers(1, 120))
+def test_router_backpressure_never_loses_weight(ops, capacity):
+    """With a capacity the router may REFUSE a route (None); a refusal
+    must leave the books untouched, an idle replica must always accept,
+    and accepted weight still balances exactly."""
+    router = ReplicaRouter(Topology(), num_pods=2, data_size=2,
+                           capacity_tokens=capacity)
+    outstanding = {}
+    for op, rid, w in ops:
+        if op == "route":
+            before = dict(router.loads())
+            rep = router.route(rid, tokens=w)
+            if rep is None:
+                assert rid not in outstanding
+                assert router.loads() == before      # refusal: no change
+                assert all(v > 0 for v in before.values())
+            else:
+                outstanding.setdefault(rid, w)
+        else:
+            getattr(router, op)(rid)
+            outstanding.pop(rid, None)
+        loads = router.loads()
+        assert all(v >= 0 for v in loads.values())
+        assert sum(loads.values()) == sum(outstanding.values())

@@ -21,7 +21,7 @@ from repro.data.pipeline import DataConfig, HostLoader
 from repro.models import transformer
 from repro.models.model import build_model
 from repro.serve import (Engine, EngineConfig, PagedKVCache, ReplicaRouter,
-                         Request, RequestQueue, Scheduler,
+                         Request, RequestQueue, Scheduler, ServeCluster,
                          StateSlotAllocator)
 from repro.serve.kv_cache import TRASH_BLOCK, TRASH_SLOT, BlockAllocator
 
@@ -101,6 +101,48 @@ def test_paged_kv_cache_tables_and_trash():
         kv.ensure_capacity(10, 17)                   # > blocks_per_seq
 
 
+def test_paged_kv_cache_sliding_window_reclaims_blocks():
+    """Regression (block leak): blocks entirely out of the attention
+    window were never freed, so a long windowed generation held
+    O(generated) pool blocks and starved the pool.  With a reclaim
+    window the footprint must stay O(window) as the frontier advances,
+    freed logical slots must keep their index (as trash placeholders),
+    and free_seq must not double-free them."""
+    kv = PagedKVCache(num_blocks=17, block_size=4, blocks_per_seq=16,
+                      window=8)
+    usable = 16
+    for pos in range(60):
+        assert kv.ensure_capacity(7, pos + 1, query_start=pos)
+        # window 8 over 4-token blocks: <= 2 fully-live blocks + the
+        # frontier block + one straddling the window edge
+        assert usable - kv.allocator.num_free <= 4
+    assert kv.num_blocks_of(7) <= 4
+    row = kv.table_row(7)
+    assert row.shape == (16,)
+    assert row[0] == TRASH_BLOCK                 # reclaimed leading slot
+    assert row[14] != TRASH_BLOCK                # frontier block is live
+    kv.free_seq(7)
+    assert kv.allocator.num_free == usable       # placeholders not re-freed
+    # window=0 (any full-attention layer) must keep every block
+    kv0 = PagedKVCache(num_blocks=17, block_size=4, blocks_per_seq=16)
+    for pos in range(60):
+        assert kv0.ensure_capacity(7, pos + 1, query_start=pos)
+    assert kv0.num_blocks_of(7) == 15
+
+
+def test_paged_spec_reclaim_window_per_family():
+    """Reclamation is legal only when EVERY block-pooled layer is
+    windowed; one full-attention layer pins all blocks forever."""
+    full = smoke_variant(get_config("qwen2-1.5b")).replace(mtp_depth=0)
+    assert build_model(full).paged_spec.reclaim_window == 0
+    swa = full.replace(sliding_window=16)
+    assert build_model(swa).paged_spec.reclaim_window == 16
+    hybrid = _family_config("rglru")             # local_attn window 16
+    assert build_model(hybrid).paged_spec.reclaim_window == 16
+    ssm = _family_config("mamba")                # no block pools at all
+    assert build_model(ssm).paged_spec.reclaim_window == 0
+
+
 # ---------------------------------------------------------------------------
 # scheduler
 # ---------------------------------------------------------------------------
@@ -159,6 +201,28 @@ def test_scheduler_head_of_line_blocks_when_pool_full():
 # ---------------------------------------------------------------------------
 
 
+def test_device_slices_partition_pod_major():
+    """Serving replica slices: pods split first (slow axis), then fast
+    groups — pod-major order matches ReplicaRouter.replica_id."""
+    s = Topology(intra_group_size=2).device_slices(8, num_pods=2)
+    assert s == [[0, 1], [2, 3], [4, 5], [6, 7]]
+    flat = sorted(i for grp in s for i in grp)
+    assert flat == list(range(8))                # exact tiling
+    # whole fast axis = one replica per pod
+    assert Topology().device_slices(8, num_pods=2) == [[0, 1, 2, 3],
+                                                       [4, 5, 6, 7]]
+    assert Topology().device_slices(4) == [[0, 1, 2, 3]]
+
+
+def test_device_slices_indivisible_raises():
+    with pytest.raises(ValueError):
+        Topology().device_slices(5, num_pods=2)
+    with pytest.raises(ValueError):
+        Topology(intra_group_size=3).device_slices(8)
+    with pytest.raises(ValueError):
+        Topology().device_slices(4, num_pods=0)
+
+
 def test_router_places_one_replica_per_fast_group():
     topo = Topology(intra_group_size=4)
     router = ReplicaRouter(topo, num_pods=2, data_size=8)
@@ -177,6 +241,74 @@ def test_router_least_loaded_with_fcfs_ties():
     router.complete(1)                           # replica 1 drains
     assert router.route(3).replica_id == 1
     assert router.loads() == {0: 2, 1: 1}
+
+
+def test_router_complete_unknown_or_double_rid_is_noop():
+    """Regression: complete() on an unknown rid raised KeyError
+    (``self._assignment.pop(rid)`` had no default), and a double
+    completion corrupted the load counter."""
+    router = ReplicaRouter(Topology(), num_pods=2, data_size=4)
+    router.complete(123)                         # never routed: no-op
+    router.route(0, tokens=5)
+    router.complete(0)
+    router.complete(0)                           # double completion: no-op
+    router.release(0)                            # and again via release
+    assert router.loads() == {0: 0, 1: 0}
+    assert router.outstanding() == 0
+
+
+def test_router_token_weighted_routing():
+    """Loads are outstanding tokens, not request counts: one long-form
+    request must NOT be balanced against one short chat turn."""
+    router = ReplicaRouter(Topology(), num_pods=2, data_size=4)
+    assert router.route(0, tokens=100).replica_id == 0
+    # count-based routing would alternate; token weighting keeps filling
+    # replica 1 until it catches up
+    assert router.route(1, tokens=10).replica_id == 1
+    assert router.route(2, tokens=10).replica_id == 1
+    assert router.loads() == {0: 100, 1: 20}
+    assert router.route(0, tokens=999).replica_id == 0   # existing: stable
+
+
+def test_router_backpressure_saturation_and_idle_override():
+    router = ReplicaRouter(Topology(), num_pods=2, data_size=4,
+                           capacity_tokens=16)
+    # an idle replica always accepts, even an oversized request —
+    # otherwise a request larger than capacity could never place
+    assert router.route(0, tokens=100) is not None
+    assert router.route(1, tokens=100) is not None
+    assert router.route(2, tokens=1) is None     # saturated: backpressure
+    assert router.outstanding() == 2             # refused != half-routed
+    router.release(1)
+    assert router.route(2, tokens=1).replica_id == 1
+
+
+def test_router_invariants_random_walk():
+    """Seeded random interleaving of route/complete/release with
+    colliding rids: loads stay non-negative, their sum tracks the
+    outstanding routed weight, and nothing ever throws.  (The
+    hypothesis-driven version lives in test_router_props.py.)"""
+    rng = np.random.default_rng(0)
+    router = ReplicaRouter(Topology(intra_group_size=2), num_pods=2,
+                           data_size=4)
+    outstanding = {}
+    for _ in range(500):
+        rid = int(rng.integers(0, 8))
+        op = rng.random()
+        if op < 0.5:
+            w = int(rng.integers(1, 64))
+            assert router.route(rid, tokens=w) is not None
+            outstanding.setdefault(rid, w)       # re-route keeps old weight
+        elif op < 0.75:
+            router.complete(rid)
+            outstanding.pop(rid, None)
+        else:
+            router.release(rid)
+            outstanding.pop(rid, None)
+        loads = router.loads()
+        assert all(v >= 0 for v in loads.values())
+        assert sum(loads.values()) == sum(outstanding.values())
+        assert router.outstanding() == len(outstanding)
 
 
 # ---------------------------------------------------------------------------
@@ -434,6 +566,153 @@ def test_preempted_victim_keeps_no_blocks(lm):
         ref = _sequential_greedy(model, params, req.prompt,
                                  req.max_new_tokens)
         assert results[rid].tokens == ref
+
+
+def test_engine_sliding_window_footprint_stays_o_window(lm):
+    """Regression (block leak): a long sliding-window generation must
+    hold O(window) pool blocks, not O(generated) — on a pool far too
+    small for the full sequence this run only completes (without
+    preemption or a pool-too-small error) if out-of-window blocks are
+    reclaimed as the frontier advances.  Greedy output must still match
+    the dense ring-cache reference."""
+    cfg, model, params = lm
+    wcfg = cfg.replace(sliding_window=16)
+    wmodel = build_model(wcfg)
+    assert wmodel.paged_spec.reclaim_window == 16
+    params = wmodel.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, wcfg.vocab_size, (9,))
+    # 9 + 110 tokens need 30 blocks unreclaimed; the pool has 8 usable
+    eng = Engine(wmodel, params, EngineConfig(
+        max_batch=1, block_size=4, num_blocks=9, max_seq_len=128,
+        prefill_chunk=8, prefill_token_budget=8, admission_lookahead=0))
+    eng.submit(Request(prompt=prompt.copy(), max_new_tokens=110))
+    peak, results = 0, {}
+    while eng.has_work:
+        for r in eng.step():
+            results[r.rid] = r
+        peak = max(peak, 8 - eng.kv.allocator.num_free)
+    assert peak <= 6                             # ceil(16/4) + frontier + 1
+    assert eng.stats["preemptions"] == 0
+    (res,) = results.values()
+    ref = _sequential_greedy(wmodel, params, prompt, 110)
+    assert res.tokens == ref
+
+
+# ---------------------------------------------------------------------------
+# multi-replica cluster (engines on mesh slices; dispatcher = slow layer)
+# ---------------------------------------------------------------------------
+
+
+def _cluster_ecfg():
+    return EngineConfig(max_batch=3, block_size=8, num_blocks=65,
+                        max_seq_len=64, prefill_chunk=16,
+                        prefill_token_budget=24)
+
+
+def test_cluster_matches_sequential_greedy_per_replica(lm):
+    """Fan a workload over 2 replica engines (disjoint device slices
+    when the host exposes them, shared otherwise) and require every
+    request's token stream to equal single-request dense decode — the
+    engine==sequential equivalence per replica, plus: both replicas
+    must actually serve, and all router load must drain."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(9)
+    protos = [(rng.integers(0, cfg.vocab_size, (int(p),)), int(g))
+              for p, g in zip(rng.integers(3, 40, 6), rng.integers(2, 16, 6))]
+    subs = [Request(prompt=np.asarray(p).copy(), max_new_tokens=g)
+            for p, g in protos]
+    cluster = ServeCluster.for_replicas(model, params, _cluster_ecfg(),
+                                        num_replicas=2)
+    assert cluster.num_replicas == 2
+    if len(jax.devices()) >= 2:                  # honest slices: disjoint
+        assert not set(cluster.slices[0]) & set(cluster.slices[1])
+    results = cluster.run(subs)
+    assert len(results) == len(subs)
+    assert all(v == 0 for v in cluster.loads().values())
+    assert all(e.stats["generated_tokens"] > 0 for e in cluster.engines)
+    for (p, g), sub in zip(protos, subs):
+        ref = _sequential_greedy(model, params, np.asarray(p), g)
+        assert results[sub.rid].tokens == ref
+
+
+def test_cluster_routed_but_never_picked_up_releases_load(lm):
+    """Regression (load leak): a request routed into a replica's queue
+    and then drained at close — no worker ever picked it up — kept its
+    replica's load forever, skewing every later routing decision."""
+    cfg, model, params = lm
+    cluster = ServeCluster.for_replicas(model, params, _cluster_ecfg(),
+                                        num_replicas=2)
+    rng = np.random.default_rng(10)
+    for _ in range(4):                           # workers never started
+        cluster.submit(Request(prompt=rng.integers(0, cfg.vocab_size, (8,)),
+                               max_new_tokens=4))
+    assert sum(cluster.loads().values()) > 0
+    cluster.close()                              # drains + releases
+    assert sum(cluster.loads().values()) == 0
+    assert cluster.router.outstanding() == 0
+
+
+def test_cluster_cancel_before_pickup(lm):
+    cfg, model, params = lm
+    rng = np.random.default_rng(12)
+    keep = Request(prompt=rng.integers(0, cfg.vocab_size, (8,)),
+                   max_new_tokens=3)
+    drop = Request(prompt=rng.integers(0, cfg.vocab_size, (8,)),
+                   max_new_tokens=3)
+    cluster = ServeCluster.for_replicas(model, params, _cluster_ecfg(),
+                                        num_replicas=2)
+    cluster.submit(keep)
+    cluster.submit(drop)
+    assert cluster.cancel(drop.rid)              # before any worker ran
+    assert cluster.cancel(drop.rid)              # idempotent
+    with cluster:                                # start, serve, close, join
+        pass
+    results = cluster.results()
+    assert keep.rid in results and drop.rid not in results
+    assert sum(cluster.loads().values()) == 0
+
+
+def test_cluster_cancel_after_pickup_returns_false(lm):
+    """Once an engine accepted a request, cancel() must refuse: the
+    request runs to completion, appears in results, and keeps its
+    router weight until the completion releases it."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(14)
+    req = Request(prompt=rng.integers(0, cfg.vocab_size, (8,)),
+                  max_new_tokens=4)
+    cluster = ServeCluster.for_replicas(model, params, _cluster_ecfg(),
+                                        num_replicas=1)
+    with cluster:
+        cluster.submit(req)
+        deadline = time.perf_counter() + 60.0
+        while time.perf_counter() < deadline:     # wait for engine pickup
+            with cluster._cv:
+                if req.rid in cluster._picked:
+                    break
+            time.sleep(0.001)
+        assert not cluster.cancel(req.rid)        # in-flight: refused
+    results = cluster.results()
+    assert len(results[req.rid].tokens) == 4      # ran to completion
+    assert sum(cluster.loads().values()) == 0     # released at completion
+
+
+def test_cluster_backpressure_blocks_until_release(lm):
+    """With capacity_tokens below two requests' weight, the second
+    submit must block until the first completes — and then place."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(13)
+    mk = lambda: Request(prompt=rng.integers(0, cfg.vocab_size, (8,)),
+                         max_new_tokens=4)       # weight 12
+    cluster = ServeCluster.for_replicas(model, params, _cluster_ecfg(),
+                                        num_replicas=1, capacity_tokens=20)
+    with cluster:
+        cluster.submit(mk())
+        t0 = time.perf_counter()
+        cluster.submit(mk(), timeout=30.0)       # blocks for a release
+        assert time.perf_counter() - t0 < 30.0
+    assert len(cluster.results()) == 2
+    assert sum(cluster.loads().values()) == 0
 
 
 # ---------------------------------------------------------------------------

@@ -56,3 +56,7 @@ def test_whole_axis_group_is_none():
 def test_indivisible_group_size_raises():
     with pytest.raises(ValueError):
         Topology(intra_group_size=3).group_count(16)
+
+# Topology.device_slices tests live in test_serve.py (the replica
+# placement they underpin) — this module's hypothesis importorskip
+# would skip them wherever the dev extra is absent.
