@@ -37,7 +37,14 @@ def main():
     ap.add_argument("--gen-len", type=int, default=32,
                     help="max new tokens (lengths are mixed)")
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k restriction for temperature sampling "
+                    "(0 = full vocab); sampled on device")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps-per-dispatch", type=int, default=1,
+                    help="decode steps per device dispatch: N > 1 runs "
+                    "the on-device decode loop (one host dispatch per N "
+                    "tokens)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas, one per device slice")
     args = ap.parse_args()
@@ -51,7 +58,8 @@ def main():
         max_batch=args.batch, block_size=16, max_seq_len=max_seq,
         prefill_chunk=min(32, args.prompt_len),
         prefill_token_budget=2 * min(32, args.prompt_len),
-        temperature=args.temperature, seed=args.seed)
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+        steps_per_dispatch=args.steps_per_dispatch)
     # pool sized so every admissible sequence can reach max_seq_len
     ecfg = dataclasses.replace(
         ecfg, num_blocks=(ecfg.max_batch + ecfg.admission_lookahead)

@@ -147,6 +147,24 @@ def flash_decode_paged(q, k_pool, v_pool, block_tables, pos, *,
 
 
 # ---------------------------------------------------------------------------
+# device-side serving sampler (greedy / temperature / top-k)
+# ---------------------------------------------------------------------------
+
+
+def sample_tokens(logits, keys, *, temperature: float, top_k: int = 0):
+    """Per-row token sampling on device for the serving engine's fused
+    step and N-step decode loop: greedy argmax at temperature <= 0,
+    else top-k-restricted temperature categorical keyed per row
+    (``ref.sample_keys``: fold_in(request, position) — stateless, so the
+    draw is identical at every dispatch depth).  jnp implementation
+    today — sampling is bandwidth-trivial next to the model call; a
+    fused top-k+gumbel Pallas kernel is a follow-on."""
+    from repro.kernels import ref as _ref
+    return _ref.sample_tokens(logits, keys, temperature=temperature,
+                              top_k=top_k)
+
+
+# ---------------------------------------------------------------------------
 # SSD intra-chunk (Mamba-2)
 # ---------------------------------------------------------------------------
 

@@ -89,6 +89,35 @@ def flash_decode_paged(q, k_pool, v_pool, block_tables, pos, *,
     return o.reshape(b, c, h, hd).astype(q.dtype)
 
 
+def mla_decode_views(q_lat, q_rope, ckv, kr, pos, *, scale):
+    """Absorbed MLA attention over per-row *contiguous* latent views —
+    the loop-compatible attend: the N-step on-device decode loop gathers
+    each row's latent blocks into a contiguous (B, S, r) view once per
+    dispatch and calls this every iteration, instead of paying the pool
+    gather per token.
+
+    q_lat (B,C,H,r); q_rope (B,C,H,rd); ckv (B,S,r); kr (B,S,rd);
+    pos (B,): absolute position of each row's first query.  View slot j
+    holds logical position j; slots beyond a row's frontier (including a
+    trailing trash slot inactive rows write to) hold garbage the
+    ``kpos <= qpos`` mask discards.  Returns o_lat (B,C,H,r).
+    """
+    c = q_lat.shape[1]
+    s = ckv.shape[1]
+    ckv = ckv.astype(jnp.float32)
+    kr = kr.astype(jnp.float32)
+    logits = (jnp.einsum("bchr,bsr->bchs", q_lat.astype(jnp.float32), ckv)
+              + jnp.einsum("bchd,bsd->bchs", q_rope.astype(jnp.float32), kr)
+              ) * scale
+    kpos = jnp.arange(s)[None, None]                           # (1,1,S)
+    qpos = (jnp.asarray(pos).reshape(-1, 1)
+            + jnp.arange(c)[None])[..., None]                  # (B,C,1)
+    logits = jnp.where((kpos <= qpos)[:, :, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bchs,bsr->bchr", p, ckv)
+    return o.astype(q_lat.dtype)
+
+
 def mla_decode_paged(q_lat, q_rope, ckv_pool, kr_pool, block_tables, pos, *,
                      scale):
     """Oracle for paged-MLA absorbed attention over a *latent* block pool.
@@ -109,18 +138,48 @@ def mla_decode_paged(q_lat, q_rope, ckv_pool, kr_pool, block_tables, pos, *,
     bs = ckv_pool.shape[1]
     nb_seq = block_tables.shape[1]
     s = nb_seq * bs
-    ckv = ckv_pool[block_tables].reshape(b, s, r).astype(jnp.float32)
-    kr = kr_pool[block_tables].reshape(b, s, -1).astype(jnp.float32)
-    logits = (jnp.einsum("bchr,bsr->bchs", q_lat.astype(jnp.float32), ckv)
-              + jnp.einsum("bchd,bsd->bchs", q_rope.astype(jnp.float32), kr)
-              ) * scale
-    kpos = jnp.arange(s)[None, None]                           # (1,1,S)
-    qpos = (jnp.asarray(pos).reshape(-1, 1)
-            + jnp.arange(c)[None])[..., None]                  # (B,C,1)
-    logits = jnp.where((kpos <= qpos)[:, :, None], logits, NEG_INF)
-    p = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bchs,bsr->bchr", p, ckv)
-    return o.astype(q_lat.dtype)
+    ckv = ckv_pool[block_tables].reshape(b, s, r)
+    kr = kr_pool[block_tables].reshape(b, s, -1)
+    return mla_decode_views(q_lat, q_rope, ckv, kr, pos, scale=scale)
+
+
+def sample_keys(seed: int, rids, positions):
+    """Per-row PRNG keys for device-side serving samplers.
+
+    The key for one sampled token is ``fold_in(fold_in(PRNGKey(seed),
+    rid), position)`` — a pure function of the request identity and the
+    token's absolute position.  That makes the stream *stateless*: the
+    same token is drawn whether the engine samples it in a depth-1
+    dispatch, mid-way through an N-step on-device decode loop, or while
+    recomputing a preempted request — no key threading to keep in sync
+    across dispatch layouts.
+
+    rids, positions: (B,) int32.  Returns (B,) stacked raw keys.
+    """
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(
+        lambda r, p: jax.random.fold_in(jax.random.fold_in(base, r), p)
+    )(jnp.asarray(rids), jnp.asarray(positions))
+
+
+def sample_tokens(logits, keys, *, temperature: float, top_k: int = 0):
+    """Per-row token sampling oracle: greedy argmax when temperature
+    <= 0, else temperature-scaled categorical (gumbel-max, the exact
+    math of ``jax.random.categorical``) over the optional top-k
+    restriction.  logits (B, V); keys (B,) per-row PRNG keys (from
+    ``sample_keys``).  Returns (B,) int32.
+
+    temperature/top_k are Python statics so the greedy path compiles
+    with no RNG in it at all.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32)
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]     # (B, 1)
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    toks = jax.vmap(jax.random.categorical)(keys, lg / temperature)
+    return toks.astype(jnp.int32)
 
 
 def ssd_chunk_bchp(x, dt, dacum, B, C):

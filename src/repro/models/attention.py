@@ -317,6 +317,32 @@ def apply_attention(params, x, cfg, *, positions=None, causal=True,
             new_cache = {"k": kc, "v": vc}
         return y, new_cache
 
+    # ---- N-step decode loop: per-row contiguous K/V views ----
+    if "kview" in cache:
+        # The decode loop gathers each row's blocks into a contiguous
+        # (B, S+1, KV, hd) view once per dispatch (slot j = logical
+        # position j; slot S is the trash row inactive rows write to)
+        # and scatters back once after N steps — so each iteration here
+        # is a direct per-row write plus the same masked attend,
+        # without the per-token pool gather/scatter.
+        kc, vc = cache["kview"], cache["vview"]
+        sview = kc.shape[1] - 1
+        q, k, v = _qkv(params, x, x, cfg, h, kv)
+        positions = pos[:, None]                                # (B,1)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        rows = jnp.arange(b)
+        wpos = jnp.where(valid_len > 0 if valid_len is not None else True,
+                         jnp.minimum(pos, sview - 1), sview)
+        kc = kc.at[rows, wpos].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[rows, wpos].set(v[:, 0].astype(vc.dtype))
+        o = paged_decode_attention(_group(q, kv), kc, vc, positions,
+                                   window=window)
+        y = o.reshape(b, 1, h * cfg.head_dim)
+        y = jnp.einsum("bsk,kd->bsd", y, params["wo"].astype(dt))
+        return y, {"kview": kc, "vview": vc}
+
     # ---- paged decode / chunked prefill ----
     if "block_tables" in cache:
         # cache: k/v block pools (nb, bs, KV, hd) + block_tables (B, NB);

@@ -115,6 +115,34 @@ def apply_mla(params, x, cfg, *, positions=None, cache=None, pos=None,
             new_cache = {"ckv": ckv_c, "krope": kr_c}
         return y, new_cache
 
+    # ---- N-step decode loop: per-row contiguous latent views ----
+    if "ckv_view" in cache:
+        # same schedule as the K/V view path: the loop gathers each
+        # row's latent blocks into contiguous (B, S+1, ·) views once
+        # per dispatch (slot S = trash row), writes this token's latent
+        # directly at its position, and attends the view absorbed
+        from repro.kernels.ref import mla_decode_views
+        ckv_c, kr_c = cache["ckv_view"], cache["kr_view"]
+        sview = ckv_c.shape[1] - 1
+        q_nope, q_rope = _project_q(params, x, cfg)    # (B,1,H,*)
+        c, k_rope = _latent_kv(params, x, cfg)
+        positions = pos[:, None]                       # (B,1)
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0, :]
+        rows = jnp.arange(b)
+        wpos = jnp.where(valid_len > 0 if valid_len is not None else True,
+                         jnp.minimum(pos, sview - 1), sview)
+        ckv_c = ckv_c.at[rows, wpos].set(c[:, 0].astype(ckv_c.dtype))
+        kr_c = kr_c.at[rows, wpos].set(k_rope[:, 0].astype(kr_c.dtype))
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)
+        o_lat = mla_decode_views(q_lat, q_rope, ckv_c, kr_c, pos,
+                                 scale=scale)
+        o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(dt), wv)
+        o = o.reshape(b, 1, h * a.v_head_dim)
+        y = jnp.einsum("bsk,kd->bsd", o, params["wo"].astype(dt))
+        return y, {"ckv_view": ckv_c, "kr_view": kr_c}
+
     # ---- paged decode / chunked prefill (absorbed, latent pools) ----
     if "block_tables" in cache:
         from repro.kernels.ref import mla_decode_paged

@@ -22,11 +22,19 @@ is paged depends on the family — ``paged_spec`` records the capability:
                    num_state_slots=...)
   paged_step(params, cache, slot_buf, tokens, block_tables, meta)
       # ONE fused call per engine step: mixed prefill+decode rows
-      # (tokens (B,C); meta (5,B) packs pos/valid_len/src_slot/
-      # dst_slot/state_slot), greedy argmax sampled on device, frontier
-      # logits sliced on device; slot_buf wires step k's sampled tokens
-      # into step k+1 without a host round-trip.  Returns
-      # (next_tokens (B,), logits (B,V), slot_buf, cache).
+      # (tokens (B,C); meta (6,B) packs pos/valid_len/src_slot/
+      # dst_slot/state_slot/rid), sampling on device (greedy argmax, or
+      # temperature/top-k keyed per row), frontier logits sliced AND
+      # consumed on device; slot_buf wires step k's sampled tokens into
+      # step k+1 without a host round-trip.  Returns
+      # (next_tokens (B,), slot_buf, cache) — no logits output at all.
+  paged_decode_loop(params, cache, slot_buf, block_tables, meta)
+      # N decode steps per dispatch entirely on device: lax.fori_loop
+      # around the fused step body with on-device sampling and
+      # on-device stop conditions (per-row step budget, eos, block
+      # capacity).  Returns (tokens (B,N), counts (B,), eos_hit (B,),
+      # slot_buf, cache) — the host touches the device once per N
+      # tokens.
 """
 from __future__ import annotations
 
@@ -89,6 +97,7 @@ class Model:
     # paged serving interface (None for families without a paged form)
     init_paged_cache: Optional[Callable] = None
     paged_step: Optional[Callable] = None
+    paged_decode_loop: Optional[Callable] = None  # N steps per dispatch
     paged_step_logits: Optional[Callable] = None  # unfused PR-1 baseline
     paged_spec: Optional[PagedSpec] = None
     # shared jax.jit wrappers keyed by (name, donate): every Engine over
@@ -167,6 +176,12 @@ def build_model(cfg: ModelConfig) -> Model:
         init_paged_cache=functools.partial(transformer.init_paged_cache,
                                            cfg),
         paged_step=functools.partial(transformer.paged_step, cfg=cfg),
+        # every paged family supports the N-step on-device decode loop:
+        # block-pool families get the device-side capacity predicate
+        # from their tables, slot-state families rely on the host's
+        # token metering folded into the per-row step budget
+        paged_decode_loop=functools.partial(transformer.paged_decode_loop,
+                                            cfg=cfg),
         # the unfused PR-1 baseline predates per-row valid_len/state
         # slots; it stays the measurable baseline for block-pool
         # families only

@@ -70,12 +70,20 @@ def apply_rglru(params, x, cfg, *, cache=None, make_cache=False, pos=None,
     g = cfg.rglru
     dt = x.dtype
     b, s, d = x.shape
-    paged = state_slots is not None and cache is not None
+    view = cache is not None and "conv_view" in cache
+    paged = state_slots is not None and cache is not None and not view
 
     gate = jax.nn.gelu(
         jnp.einsum("bsd,dw->bsw", x, params["w_gate"].astype(dt)))
     xr = jnp.einsum("bsd,dw->bsw", x, params["w_x"].astype(dt))
-    if paged:
+    if view:
+        # N-step decode loop: per-row state views gathered once at loop
+        # entry, scattered back once at exit; stopped rows (valid 0)
+        # make the identity update (a=1, b=0) so their view is unchanged
+        conv0 = cache["conv_view"].astype(dt)
+        h0 = cache["h_view"].astype(jnp.float32)
+        conv_cache = conv0
+    elif paged:
         fresh = (pos == 0)
         conv0 = jnp.where(fresh[:, None, None], 0,
                           cache["conv"][state_slots]).astype(dt)
@@ -117,6 +125,11 @@ def apply_rglru(params, x, cfg, *, cache=None, make_cache=False, pos=None,
 
     y = hseq.astype(dt) * gate
     out = jnp.einsum("bsw,wd->bsd", y, params["w_out"].astype(dt))
+    if view:
+        new_conv = slot_conv_window(conv0, xr_raw, valid_len)
+        return out, {
+            "conv_view": new_conv.astype(cache["conv_view"].dtype),
+            "h_view": h_last.astype(cache["h_view"].dtype)}
     if paged:
         new_conv = slot_conv_window(conv0, xr_raw, valid_len)
         return out, {

@@ -226,14 +226,24 @@ def apply_ssm(params, x, cfg, *, cache=None, make_cache=False, pos=None,
     d_inner, n_heads, conv_dim = _dims(cfg)
     b, slen, d = x.shape
     dt_ = x.dtype
-    paged = state_slots is not None and cache is not None
+    view = cache is not None and "conv_view" in cache
+    paged = state_slots is not None and cache is not None and not view
 
     zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(dt_))
     z = zxbcdt[..., :d_inner]
     xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
     dt_raw = zxbcdt[..., -n_heads:]
 
-    if paged:
+    if view:
+        # N-step decode loop: the per-row state was gathered from the
+        # slot pools once at loop entry and is scattered back once at
+        # loop exit — each iteration reads/writes the (B, ...) views
+        # directly.  Rows with valid_len == 0 make the identity update
+        # (dt masked to 0 below), so a stopped row's view is unchanged.
+        conv0 = cache["conv_view"].astype(dt_)
+        state0 = cache["state_view"]
+        conv_cache = conv0
+    elif paged:
         fresh = (pos == 0)
         conv0 = jnp.where(fresh[:, None, None], 0,
                           cache["conv"][state_slots]).astype(dt_)
@@ -277,6 +287,11 @@ def apply_ssm(params, x, cfg, *, cache=None, make_cache=False, pos=None,
     y = apply_norm(params["norm"], y * jax.nn.silu(z), cfg)
     out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(dt_))
 
+    if view:
+        new_conv = slot_conv_window(conv0, xBC_raw, valid_len)
+        return out, {
+            "conv_view": new_conv.astype(cache["conv_view"].dtype),
+            "state_view": final_state.astype(cache["state_view"].dtype)}
     if paged:
         new_conv = slot_conv_window(conv0, xBC_raw, valid_len)
         return out, {

@@ -347,8 +347,12 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int, batch: int,
                       "v": jnp.zeros((n, num_blocks, block_size,
                                       cfg.num_kv_heads, cfg.head_dim),
                                      dtype)}
-            rc["block_tables"] = jnp.zeros((n, batch, blocks_per_seq),
-                                           jnp.int32)
+            # the canonical row-count-independent placeholder (see
+            # _canonical_block_tables): real tables are broadcast in by
+            # with_block_tables at the start of every call, and keeping
+            # the resident leaf at (L, 0, 0) keeps every call's jit
+            # signature independent of the previous call's row bucket
+            rc["block_tables"] = jnp.zeros((n, 0, 0), jnp.int32)
         elif kind == "ssm":
             single = ssm_mod.init_ssm_cache(cfg, nslots, dtype)
             rc = jax.tree.map(
@@ -381,6 +385,27 @@ def with_block_tables(cache, block_tables):
     return out
 
 
+def _canonical_block_tables(cache):
+    """Zero out the tables leaf to a row-count-independent (L, 0, 0)
+    placeholder before the cache goes back to the engine.  Tables are
+    replaced via ``with_block_tables`` at the start of every call, so
+    between calls the leaf is purely structural — but if it kept this
+    call's (L, rows, NB) shape, the NEXT call's jit signature would
+    depend on THIS call's row bucket, and serving would compile one
+    executable per (previous rows, current rows) pair: mid-serving XLA
+    compiles, i.e. multi-second latency spikes the warmup can't cover."""
+    out = {}
+    for run, rc in cache.items():
+        if "block_tables" not in rc:
+            out[run] = rc
+            continue
+        nc = dict(rc)
+        n = rc["block_tables"].shape[0]
+        nc["block_tables"] = jnp.zeros((n, 0, 0), jnp.int32)
+        out[run] = nc
+    return out
+
+
 def paged_step_logits(params, cache, tokens, pos, cfg):
     """Unfused step over a paged cache (the PR-1 engine's inner loop,
     kept as the measurable baseline): full (B, C, V) logits ship to host
@@ -390,17 +415,19 @@ def paged_step_logits(params, cache, tokens, pos, cfg):
     return logits, new_cache
 
 
-def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg):
+def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg,
+               *, temperature: float = 0.0, top_k: int = 0, seed: int = 0):
     """Fused continuous-batching step over a paged cache: mixed
-    prefill+decode rows, device-side greedy sampling, and on-device
-    last-token logit slicing.
+    prefill+decode rows, device-side sampling (greedy, or
+    temperature/top-k keyed per row), and on-device last-token logit
+    slicing.
 
     tokens: (B, C) int32 — decode rows use only column 0, prefill rows
     carry a prompt chunk; block_tables: (B, NB) int32 per-row block
     tables (broadcast across layers inside the jit — cheaper than the
-    host materializing the broadcast every step); meta: (5, B) int32
+    host materializing the broadcast every step); meta: (6, B) int32
     packed per-row control inputs (one host->device transfer instead of
-    five):
+    six):
 
       meta[0] = pos       absolute position of the row's first token
       meta[1] = valid_len number of real tokens in the row (0 disables
@@ -416,16 +443,25 @@ def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg):
       meta[4] = state_slot per-row index into the fixed-size recurrent
                           state pools (ssm/rglru runs); 0 is the trash
                           slot.  Ignored by pure block-pool families.
+      meta[5] = rid       request id, the per-row sampling identity:
+                          stochastic draws are keyed
+                          fold_in(fold_in(seed, rid), position) so the
+                          same token is drawn at any dispatch depth and
+                          across preemption recompute.  Ignored when
+                          temperature <= 0.
 
     slot_buf: (S+1,) int32 device-resident last-sampled-token-per-slot
     ring — the device-side feedback path that lets the host dispatch
-    step k+1 before fetching step k's tokens.
+    step k+1 before fetching step k's tokens.  temperature/top_k/seed
+    are Python statics (the engine bakes them into its jit wrapper), so
+    the greedy executable carries no RNG.
 
-    Returns (next_tokens (B,), frontier logits (B, V) f32, slot_buf,
-    cache).  Only the (B,)/(B,V) outputs ever ship to host — the
-    (B, C, V) prefill logits block never leaves the device.
+    Returns (next_tokens (B,), slot_buf, cache).  Only the (B,) tokens
+    ever ship to host — sampling consumed the frontier logits on
+    device, and no logits output is materialized at all (a logprobs API
+    would add a (B, k) top-logprobs output here, not the (B, V) block).
     """
-    pos, valid_len, src_slot, dst_slot, state_slot = meta
+    pos, valid_len, src_slot, dst_slot, state_slot, rid = meta
     cache = with_block_tables(cache, block_tables)
     wired = src_slot >= 0
     tok0 = jnp.where(wired, slot_buf[jnp.maximum(src_slot, 0)],
@@ -440,11 +476,232 @@ def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg):
     idx = jnp.maximum(valid_len - 1, 0)
     hf = jnp.take_along_axis(h, idx[:, None, None], axis=1)    # (B,1,D)
     logits = _logits(params, hf, cfg)[:, 0].astype(jnp.float32)
-    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    toks = _sample_rows(logits, rid, pos + valid_len,
+                        temperature=temperature, top_k=top_k, seed=seed)
     spare = slot_buf.shape[0] - 1
     dst = jnp.where(dst_slot >= 0, dst_slot, spare)
     slot_buf = slot_buf.at[dst].set(toks)
-    return toks, logits, slot_buf, new_cache
+    return toks, slot_buf, _canonical_block_tables(new_cache)
+
+
+def _sample_rows(logits, rids, positions, *, temperature, top_k, seed):
+    """Sample one token per row on device.  The sampled token's key is a
+    pure function of (seed, rid, absolute position), so the draw is
+    identical whether it happens in a depth-1 fused step, inside the
+    N-step decode loop, or while recomputing a preempted request."""
+    from repro.kernels import ops as kops
+    from repro.kernels.ref import sample_keys
+    keys = (sample_keys(seed, rids, positions)
+            if temperature > 0.0 else None)
+    return kops.sample_tokens(logits, keys, temperature=temperature,
+                              top_k=top_k)
+
+
+def _paged_block_size(cache):
+    """Tokens per physical block of the paged cache's block pools (K/V
+    or MLA latent — they page identically), or 0 when no run is
+    block-pooled (pure slot-state families)."""
+    for rc in cache.values():
+        if "block_tables" in rc:
+            pool = rc["ckv"] if "ckv" in rc else rc["k"]
+            return pool.shape[2]           # (L, nb, bs, ...)
+    return 0
+
+
+def _gather_view(pool, bt):
+    """(L, nb, bs, ...) pool + (B, NB) tables -> (B, NB*bs + 1, ...)
+    per-row contiguous views with one trailing trash slot (index S) for
+    inactive rows' writes — garbage there carries kpos = S, which every
+    causal mask discards."""
+    l, _, bs = pool.shape[:3]
+    b, nbk = bt.shape
+    v = pool[:, bt].reshape((l, b, nbk * bs) + pool.shape[3:])
+    pad = jnp.zeros((l, b, 1) + pool.shape[3:], pool.dtype)
+    return jnp.concatenate([v, pad], axis=2)
+
+
+def _scatter_view(pool, bt, view):
+    """Write the (trash-slot-stripped) views back through the tables.
+    Real blocks belong to exactly one row, so the only duplicate scatter
+    indices are trash placeholders (block 0) — garbage lands where
+    garbage belongs."""
+    l, _, bs = pool.shape[:3]
+    b, nbk = bt.shape
+    body = view[:, :, :-1].reshape((l, b, nbk, bs) + pool.shape[3:])
+    return pool.at[:, bt].set(body)
+
+
+def _loop_views(cache, block_tables, state_slot, pos0):
+    """Rearrange the paged cache into the decode loop's per-row resident
+    form: block pools gather into contiguous views (the pool gather and
+    the table indirection are paid once per dispatch instead of once per
+    token), slot-state pools gather each row's O(1) state.  ``pos0 == 0``
+    rows read zero state (fresh/recomputed rows — decode rows never are,
+    but the gather keeps the paged-path semantics)."""
+    fresh = pos0 == 0
+    views = {}
+    for run, rc in cache.items():
+        if "block_tables" in rc:
+            if "ckv" in rc:
+                views[run] = {
+                    "ckv_view": _gather_view(rc["ckv"], block_tables),
+                    "kr_view": _gather_view(rc["krope"], block_tables)}
+            else:
+                views[run] = {
+                    "kview": _gather_view(rc["k"], block_tables),
+                    "vview": _gather_view(rc["v"], block_tables)}
+        else:
+            vc = {}
+            for name, leaf in rc.items():
+                g = leaf[:, state_slot]        # (L, B, ...)
+                mask = fresh.reshape((1, -1) + (1,) * (g.ndim - 2))
+                vc[f"{name}_view"] = jnp.where(mask, 0, g)
+            views[run] = vc
+    return views
+
+
+def _scatter_loop_views(cache, views, block_tables, state_slot):
+    """Inverse of ``_loop_views``: commit the views back into the
+    resident pools.  Slot-state rows all write their own slot (padding
+    rows write trash slot 0), and stopped rows' views hold their state
+    as of stopping (iterations after are identity updates), so an
+    unconditional write-back is exact."""
+    out = {}
+    for run, rc in cache.items():
+        vc = views[run]
+        if "block_tables" in rc:
+            if "ckv" in rc:
+                out[run] = {
+                    "ckv": _scatter_view(rc["ckv"], block_tables,
+                                         vc["ckv_view"]),
+                    "krope": _scatter_view(rc["krope"], block_tables,
+                                           vc["kr_view"]),
+                    "block_tables": rc["block_tables"]}
+            else:
+                out[run] = {
+                    "k": _scatter_view(rc["k"], block_tables,
+                                       vc["kview"]),
+                    "v": _scatter_view(rc["v"], block_tables,
+                                       vc["vview"]),
+                    "block_tables": rc["block_tables"]}
+        else:
+            out[run] = {
+                name: rc[name].at[:, state_slot].set(
+                    vc[f"{name}_view"].astype(rc[name].dtype))
+                for name in rc}
+    return out
+
+
+def paged_decode_loop(params, cache, slot_buf, block_tables, meta, cfg,
+                      *, num_steps: int, temperature: float = 0.0,
+                      top_k: int = 0, seed: int = 0):
+    """Run up to ``num_steps`` decode steps per row entirely on device:
+    a ``lax.fori_loop`` around the fused step body that advances per-row
+    positions, appends KV/latent/recurrent state, samples (greedy or
+    temperature/top-k via per-row fold_in keys), and evaluates stop
+    conditions on device — so the host pays ONE dispatch (and one
+    tokens/meta/tables transfer) per N tokens instead of per token.
+
+    Every row is a decode row (width 1) reading its input token from
+    ``slot_buf`` — prefill chunks never enter the loop; the engine runs
+    them through ``paged_step`` at dispatch boundaries.  meta (6, B)
+    int32:
+
+      meta[0] = pos0      absolute position of the row's first input
+                          token (the row's queries run pos0 .. pos0+k)
+      meta[1] = steps     loop-step budget for this row: the host's
+                          pre-reserved headroom, min(max_new remaining,
+                          block/slot capacity granted).  0 disables the
+                          row entirely.
+      meta[2] = slot      the row's device token slot: read its input
+                          from slot_buf[slot] each iteration, write the
+                          sample back to the same slot.
+      meta[3] = state_slot recurrent-state slot (ssm/rglru runs)
+      meta[4] = rid       sampling identity (see ``paged_step``)
+      meta[5] = eos       stop token id, or -1 for none.  The eos token
+                          itself is emitted, then the row goes inactive.
+
+    Stop conditions, all evaluated on device each iteration:
+
+      * step budget:   i >= steps  (max_new_tokens and host-side
+                       capacity metering, incl. pure slot-state
+                       families with no device tables);
+      * eos:           last sampled token == eos;
+      * capacity:      the next write position's block-table entry is
+                       the trash block (the device-side ensure-capacity
+                       predicate for block-pooled families — if the
+                       host under-reserved, e.g. under pool starvation,
+                       the row truncates instead of scattering KV into
+                       the shared trash block and decoding garbage).
+
+    The attend runs over per-row *resident views*: block pools (K/V or
+    MLA latent) gather into contiguous (B, S+1, ...) views once at loop
+    entry and scatter back once at exit, and ssm/rglru slot state is
+    gathered per row the same way — so each iteration pays a direct
+    positional write instead of the per-token pool gather/scatter
+    (``_loop_views`` / ``_scatter_loop_views``; correctness rests on
+    the engine invariant that a real block belongs to exactly one row).
+
+    A stopped row flips to valid_len=0 for the remaining iterations:
+    its KV/latent writes land in its view's trailing trash slot (masked
+    by every causal mask, never scattered back), its recurrent-state
+    update is the identity, and its token-slot writes go to the spare
+    slot, so it cannot perturb live rows — stopping is monotonic, which
+    is what lets the host read back a packed prefix per row.
+
+    Returns (tokens (B, N) int32 — row r's generated tokens are the
+    first counts[r] columns, counts (B,) int32, eos_hit (B,) bool,
+    slot_buf, cache).  Only (B,N)+(B,)+(B,) ship to host — no logits at
+    all in the steady state.
+    """
+    pos0, steps, slot, state_slot, rid, eos = meta
+    b = pos0.shape[0]
+    nb = block_tables.shape[1]
+    block_size = _paged_block_size(cache)
+    spare = slot_buf.shape[0] - 1
+    # pools -> per-row resident views: the pool gather/scatter and the
+    # block-table indirection are paid once per dispatch, not per token
+    views = _loop_views(cache, block_tables, state_slot, pos0)
+
+    def body(i, carry):
+        views, slot_buf, out, counts, stopped = carry
+        active = (i < steps) & ~stopped
+        pos = pos0 + i
+        if block_size:
+            # device-side ensure-capacity predicate: this iteration
+            # writes cache state at `pos`, which must land in a real
+            # (reserved) block — the frontier entry of an
+            # under-reserved table is still the trash placeholder
+            lblk = pos // block_size
+            entry = jnp.take_along_axis(
+                block_tables, jnp.minimum(lblk, nb - 1)[:, None],
+                axis=1)[:, 0]
+            active &= (lblk < nb) & (entry != 0)
+        valid = active.astype(jnp.int32)
+        tokens = slot_buf[slot][:, None]                        # (B, 1)
+        _, views, _, h = forward(params, {"tokens": tokens}, cfg,
+                                 cache=views, pos=pos, valid_len=valid,
+                                 state_slots=state_slot,
+                                 need_logits=False)
+        logits = _logits(params, h[:, :1], cfg)[:, 0].astype(jnp.float32)
+        tok = _sample_rows(logits, rid, pos + 1, temperature=temperature,
+                           top_k=top_k, seed=seed)
+        hit = active & (eos >= 0) & (tok == eos)
+        out = out.at[:, i].set(jnp.where(active, tok, -1))
+        # inactive rows dump their (garbage) sample into the spare slot
+        slot_buf = slot_buf.at[jnp.where(active, slot, spare)].set(tok)
+        return views, slot_buf, out, counts + valid, stopped | hit
+
+    carry = (views, slot_buf,
+             jnp.full((b, num_steps), -1, jnp.int32),
+             jnp.zeros((b,), jnp.int32), jnp.zeros((b,), bool))
+    views, slot_buf, out, counts, stopped = jax.lax.fori_loop(
+        0, num_steps, body, carry)
+    cache = _canonical_block_tables(
+        _scatter_loop_views(cache, views, block_tables, state_slot))
+    # `stopped` is only ever set by eos (budget/capacity stops come from
+    # the predicate, not the carry), so it doubles as the eos flag
+    return out, counts, stopped, slot_buf, cache
 
 
 def init_cache(cfg, batch: int, cache_len: int, dtype=None):

@@ -1,9 +1,12 @@
 """repro.serve — continuous-batching inference on top of the paged-KV
 model interface (Model.init_paged_cache / Model.paged_step).
 
-  engine.Engine        one fused mixed prefill+decode call per step,
-                       device-side greedy sampling, pipelined dispatch;
-                       pins to a mesh slice's lead device
+  engine.Engine        one fused mixed prefill+decode call per step —
+                       or N decode steps per dispatch entirely on
+                       device (steps_per_dispatch: on-device sampling,
+                       stop conditions, packed (B, N) token readback);
+                       pipelined dispatch; pins to a mesh slice's lead
+                       device
   kv_cache             block pool allocator + per-sequence block tables;
                        sliding-window block reclamation
   scheduler            FCFS policy with a prefill-token budget; RequestQueue

@@ -214,10 +214,21 @@ class ServeCluster:
                         return
                     time.sleep(0.0005)   # idle: wait for admissions
                     continue
-                for res in eng.step():
+                results = eng.step()
+                # token-weighted load accounting in N-token quanta: each
+                # dispatch's materialized tokens shed router weight as
+                # the work actually happens (a depth-N decode loop sheds
+                # up to N*rows tokens in one report), so backpressured
+                # submitters unblock mid-request instead of waiting for
+                # a completion
+                progress = eng.drain_progress()
+                if results or progress:
                     with self._cv:
-                        self._results[res.rid] = res
-                        self.router.release(res.rid)
+                        for rid, n in progress.items():
+                            self.router.progress(rid, n)
+                        for res in results:
+                            self._results[res.rid] = res
+                            self.router.release(res.rid)
                         self._cv.notify_all()
         except BaseException as e:        # surface engine crashes to join()
             with self._cv:

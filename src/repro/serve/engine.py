@@ -13,17 +13,30 @@ mixed prefill+decode rows:
     per-row ``valid_len`` input routes padded/inactive rows' KV writes
     to the trash block, so a stale row can never clobber a live
     sequence's blocks;
-  * greedy argmax sampling happens on device inside the call, and only
-    each row's frontier logits are sliced out — the host never sees a
-    ``(rows, chunk, vocab)`` logits block;
+  * sampling happens on device inside the call — greedy argmax AND
+    temperature/top-k (per-row keys derived fold_in(rid, position), so
+    the draw is identical at any dispatch depth and across preemption
+    recompute) — and only each row's frontier logits are sliced out;
+    the host never sees a ``(rows, chunk, vocab)`` logits block;
   * a device-resident per-slot token buffer feeds step k's sampled
     tokens into step k+1's decode rows without a host round-trip, so
     the host can dispatch step k+1 BEFORE fetching step k's tokens
     (depth-1 pipelined dispatch — the serving analogue of LSGD hiding
-    the slow collective under the next minibatch's compute).  When a
-    live request carries an ``eos_id`` (or sampling is stochastic) the
-    engine falls back to synchronous fetches, since stopping then
-    depends on token *values* the host must observe.
+    the slow collective under the next minibatch's compute).  Eos
+    stopping is optimistic: the engine keeps the pipeline full and
+    discards speculative tokens past the eos at fetch time, so eos and
+    stochastic requests pipeline too — nothing forces a synchronous
+    fetch anymore;
+  * with ``steps_per_dispatch = N > 1``, decode-only steps run as ONE
+    ``paged_decode_loop`` dispatch: N fused steps inside a
+    ``lax.fori_loop`` on device, with per-row stop conditions (step
+    budget, eos, block-capacity predicate) evaluated on device and a
+    packed (rows, N) token buffer read back.  The host's per-token
+    work — meta packing, block-table rebuilds, dispatch overhead — is
+    paid once per N tokens; admission and preemption happen only at
+    dispatch boundaries, with N-token block/slot headroom reserved
+    up front (``PagedKVCache.reserve``, partial grants truncate the
+    row's loop early instead of preempting).
 
 Because block tables, positions, and tokens are rebuilt for every call,
 rows carry no state between steps — a sequence's identity lives in its
@@ -44,6 +57,7 @@ evicted slot's stale state.
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -67,8 +81,10 @@ class EngineConfig:
     prefill_chunk: int = 32         # tokens per prefill row (padded shape)
     prefill_token_budget: int = 64  # max prefill tokens per engine step
     admission_lookahead: int = 2    # prompts prefilled ahead of a free row
-    temperature: float = 0.0        # 0 => greedy
+    temperature: float = 0.0        # 0 => greedy (sampled ON DEVICE)
+    top_k: int = 0                  # 0 => full-vocab temperature sampling
     seed: int = 0
+    steps_per_dispatch: int = 1     # decode steps per device dispatch (N)
     fused: bool = True              # False: PR-1 two-call loop (baseline)
     pipeline: bool = True           # overlap host bookkeeping with device
     donate: bool = True             # alias cache/slot buffers across steps
@@ -147,6 +163,7 @@ class _Seq:
     first_token_time: float = 0.0
     prefill_done: bool = False
     done: bool = False      # finished by count; awaiting final fetch/evict
+    desync: bool = False    # device truncated past host bookkeeping
 
     @property
     def next_pos(self) -> int:
@@ -157,11 +174,19 @@ class _Seq:
 
 @dataclass
 class _Inflight:
-    """One dispatched step whose token values the host hasn't read yet."""
-    toks: jax.Array                       # (rows,) int32, device
-    logits: jax.Array                     # (rows, V) f32, device
+    """One dispatched step whose token values the host hasn't read yet.
+
+    A single-step record carries (rows,) tokens; an N-step decode-loop
+    record carries (rows, N) tokens plus the per-row valid counts and
+    eos flags the device's stop conditions produced, and ``planned``
+    (the per-row step budget the host granted) so the fetch can
+    reconcile optimistic bookkeeping."""
+    toks: jax.Array                       # (rows,) or (rows, N) int32
     emits: List[Tuple[int, "_Seq", bool]]  # (row, seq, is_first_token)
     now: float
+    counts: Optional[jax.Array] = None    # (rows,) int32, loop only
+    eos_hit: Optional[jax.Array] = None   # (rows,) bool, loop only
+    planned: Optional[Dict[int, int]] = None   # row -> granted steps
 
 
 class Engine:
@@ -190,6 +215,12 @@ class Engine:
             raise ValueError(
                 "the unfused baseline path has no per-row state slots; "
                 "slot-state families (ssm/rglru) serve fused-only")
+        if cfg.steps_per_dispatch < 1:
+            raise ValueError("steps_per_dispatch must be >= 1")
+        if cfg.steps_per_dispatch > 1 and not cfg.fused:
+            raise ValueError(
+                "the N-step on-device decode loop requires the fused "
+                "step (device-side sampling + slot buffer)")
         self.model = model
         self.devices = tuple(devices) if devices else None
         self.device = self.devices[0] if self.devices else None
@@ -232,12 +263,27 @@ class Engine:
         # and the zero-copy update.  cfg.donate=False exists for
         # backends/benchmarks where the aliasing stall does matter.
         donate = (1, 2) if cfg.donate else ()
+        # sampling runs on device, inside the step: temperature/top_k/
+        # seed are Python statics baked into the jit wrapper (the greedy
+        # executable carries no RNG at all), so the jit cache keys on
+        # them alongside the donation layout
+        sample_kw = dict(temperature=float(cfg.temperature),
+                         top_k=int(cfg.top_k), seed=int(cfg.seed))
+        skey = tuple(sorted(sample_kw.items()))
         # jit wrappers are shared across Engine instances through the
         # model (same compiled executables; a fresh Engine costs no
         # recompilation)
         self._step_fn = model.jit_cache.setdefault(
-            ("paged_step", donate),
-            jax.jit(model.paged_step, donate_argnums=donate))
+            ("paged_step", donate, skey),
+            jax.jit(functools.partial(model.paged_step, **sample_kw),
+                    donate_argnums=donate))
+        self._loop_fn = (model.jit_cache.setdefault(
+            ("paged_decode_loop", donate, skey, cfg.steps_per_dispatch),
+            jax.jit(functools.partial(model.paged_decode_loop,
+                                      num_steps=cfg.steps_per_dispatch,
+                                      **sample_kw),
+                    donate_argnums=donate))
+            if cfg.steps_per_dispatch > 1 else None)
         self._legacy_fn = (model.jit_cache.setdefault(
             ("paged_step_logits", (1,)),
             jax.jit(model.paged_step_logits, donate_argnums=(1,)))
@@ -248,14 +294,20 @@ class Engine:
         self._free_slots: List[int] = list(range(cfg.num_slots - 1, -1, -1))
         self._live: List[_Seq] = []     # admission (FCFS) order
         self._pending: Deque[_Inflight] = deque()
+        self._desynced: List[_Seq] = []
         self._rng = np.random.default_rng(cfg.seed)
         self._preempt_counts: Dict[int, int] = {}
         self._first_token_times: Dict[int, float] = {}
+        # per-request tokens materialized since the last drain — the
+        # dispatcher turns these into router progress (load accounting
+        # in N-token quanta)
+        self._progress_tokens: Dict[int, int] = {}
         # telemetry for the bench report
         self.stats = {"steps": 0, "decode_steps": 0, "decode_slot_steps": 0,
                       "decode_active_slot_steps": 0, "prefill_tokens": 0,
                       "generated_tokens": 0, "preemptions": 0,
-                      "model_calls": 0, "host_syncs": 0}
+                      "model_calls": 0, "host_syncs": 0,
+                      "loop_dispatches": 0, "loop_truncations": 0}
 
     # -- submission ---------------------------------------------------------
 
@@ -315,49 +367,106 @@ class Engine:
             first_token_time=seq.first_token_time, finish_time=now,
             preempted=self._preempt_counts.pop(seq.req.rid, 0)))
 
+    def _preempt_seq(self, victim: _Seq) -> None:
+        """Send ``victim`` back to the waiting line (recompute mode) and
+        reclaim its blocks/slots.  The caller must have flushed in-flight
+        steps first: preemption folds the victim's generated tokens into
+        its prompt, which requires their values on host."""
+        assert not self._pending
+        self._live.remove(victim)
+        self._free_slots.append(victim.slot)
+        self.kv.free_seq(victim.req.rid)
+        if self.state_slots is not None:
+            # the victim's recurrent state is abandoned in its slot;
+            # recompute mode replays the prompt (incl. generated
+            # tokens) through the chunked scan, and pos==0 on the
+            # first replayed chunk reads zeros, not the stale slot
+            self.state_slots.free_if_held(victim.req.rid)
+        self.scheduler.preempt(victim.req, victim.out)
+        rid = victim.req.rid
+        if victim.prefill_done:
+            self._first_token_times[rid] = victim.first_token_time
+        self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
+        self.stats["preemptions"] += 1
+
     def _preempt_one(self, exclude_rid: int) -> bool:
         """Kick the most recently admitted live sequence back to the
-        waiting line (recompute mode) and reclaim its blocks.  The caller
-        must have flushed in-flight steps first: preemption folds the
-        victim's generated tokens into its prompt, which requires their
-        values on host."""
-        assert not self._pending
+        waiting line (LIFO victim selection)."""
         for victim in reversed(self._live):
             if victim.req.rid == exclude_rid or victim.done:
                 continue
-            self._live.remove(victim)
-            self._free_slots.append(victim.slot)
-            self.kv.free_seq(victim.req.rid)
-            if self.state_slots is not None:
-                # the victim's recurrent state is abandoned in its slot;
-                # recompute mode replays the prompt (incl. generated
-                # tokens) through the chunked scan, and pos==0 on the
-                # first replayed chunk reads zeros, not the stale slot
-                self.state_slots.free_if_held(victim.req.rid)
-            self.scheduler.preempt(victim.req, victim.out)
-            rid = victim.req.rid
-            if victim.prefill_done:
-                self._first_token_times[rid] = victim.first_token_time
-            self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
-            self.stats["preemptions"] += 1
+            self._preempt_seq(victim)
             return True
         return False
 
     # -- in-flight bookkeeping ----------------------------------------------
 
+    def _note_tokens(self, rid: int, n: int) -> None:
+        """Account ``n`` tokens MATERIALIZED for ``rid`` — called at
+        fetch, not dispatch, so optimistic steps whose tokens are
+        discarded (past an eos, or refused by the device capacity
+        predicate) never inflate ``generated_tokens`` or the router
+        progress quanta."""
+        self._progress_tokens[rid] = self._progress_tokens.get(rid, 0) + n
+        self.stats["generated_tokens"] += n
+
+    def drain_progress(self) -> Dict[int, int]:
+        """Tokens materialized per request since the last drain — the
+        dispatcher feeds these to ``ReplicaRouter.progress`` so routed
+        load decays in N-token quanta instead of only at completion."""
+        out, self._progress_tokens = self._progress_tokens, {}
+        return out
+
     def _fetch_one(self, finished: List[RequestResult]) -> None:
-        """Materialize the oldest dispatched step's tokens on host, apply
-        stop conditions that depend on token values (eos), and evict
-        sequences whose last token just landed."""
+        """Materialize the oldest dispatched step's tokens on host,
+        reconcile stop conditions the device applied (eos, loop
+        truncation), and evict sequences whose last token just landed.
+
+        Dispatch is optimistic: steps may already be in flight for a
+        sequence that — we now learn — hit eos.  Those later records'
+        tokens for it are discarded (the ``seq not in _live`` guard); the
+        junk they compute on device lands in the trash block / trash
+        slot / spare token slot or in blocks that are rewritten before
+        any live query attends them, so nothing live is perturbed."""
         rec = self._pending.popleft()
         toks = np.asarray(rec.toks)            # sync point
         self.stats["host_syncs"] += 1
-        logits = (np.asarray(rec.logits)
-                  if self.cfg.temperature > 0.0 else None)
+        if rec.counts is not None:             # N-step decode-loop record
+            counts = np.asarray(rec.counts)
+            eos_hit = np.asarray(rec.eos_hit)
+            for row, seq, _ in rec.emits:
+                if seq not in self._live or seq.desync:
+                    continue                   # evicted by an earlier fetch
+                c = int(counts[row])
+                seq.out.extend(int(t) for t in toks[row, :c])
+                self._note_tokens(seq.req.rid, c)
+                planned = rec.planned[row]
+                if eos_hit[row]:
+                    seq.done = True
+                    seq.gen_count = len(seq.out)
+                elif c < planned:
+                    # the device's capacity predicate refused steps the
+                    # host had reserved (defensive — the two are derived
+                    # from the same table).  Roll the optimistic count
+                    # back — including any done-by-count verdict, which
+                    # was reached counting steps the device refused —
+                    # and mark for recompute: any already-dispatched
+                    # follow-up ran from wrong positions, so the flush
+                    # preempts the sequence back to host-known tokens.
+                    seq.gen_count -= planned - c
+                    seq.done = False
+                    seq.desync = True
+                    self._desynced.append(seq)
+                if seq.done and len(seq.out) >= seq.gen_count \
+                        and seq in self._live:
+                    self._evict(seq, rec.now, finished)
+            return
         for row, seq, is_first in rec.emits:
-            tok = (int(toks[row]) if logits is None
-                   else self._sample(logits[row]))
+            if seq not in self._live or seq.desync:
+                continue                       # evicted by an earlier fetch
+            tok = int(toks[row])
             seq.out.append(tok)
+            self._note_tokens(seq.req.rid, 1)
             if is_first:
                 # a recomputed (preempted) request already delivered its
                 # first token before eviction — keep the original TTFT
@@ -365,8 +474,11 @@ class Engine:
                     seq.req.rid, rec.now)
             if (seq.req.eos_id is not None and tok == seq.req.eos_id
                     and not seq.done):
+                # eos discovered after later steps were optimistically
+                # dispatched: keep everything up to (and incl.) the eos,
+                # discard the speculative rest
                 seq.done = True
-                seq.gen_count = len(seq.out)   # discard nothing: eos is sync
+                seq.gen_count = len(seq.out)
             if seq.done and len(seq.out) >= seq.gen_count \
                     and seq in self._live:
                 self._evict(seq, rec.now, finished)
@@ -374,27 +486,47 @@ class Engine:
     def _flush(self, finished: List[RequestResult]) -> None:
         while self._pending:
             self._fetch_one(finished)
+        if self._desynced:
+            for seq in self._desynced:
+                if seq in self._live:
+                    # a desynced sequence is never legitimately finished
+                    # (its optimistic bookkeeping counted steps the
+                    # device refused, and later records were discarded)
+                    # — recompute unconditionally restores exact state
+                    seq.done = False
+                    self._preempt_seq(seq)
+                seq.desync = False
+            self._desynced.clear()
 
     # -- fused step ---------------------------------------------------------
 
     def _dispatch(self, tokens, meta, tables):
-        """One fused call.  tokens (B,C), meta (5,B) packed
-        pos/valid/src/dst/state_slot, tables (B,NB) — three host->device
-        transfers total; the layer broadcast of the tables happens inside
-        the jit."""
+        """One fused call.  tokens (B,C), meta (6,B) packed
+        pos/valid/src/dst/state_slot/rid, tables (B,NB) — three
+        host->device transfers total; the layer broadcast of the tables
+        happens inside the jit.  Returns the (B,) sampled tokens; no
+        logits ever leave the device."""
         self.stats["model_calls"] += 1
-        toks, logits, self._slot_buf, self.cache = self._step_fn(
+        toks, self._slot_buf, self.cache = self._step_fn(
             self.params, self.cache, self._slot_buf, tokens, tables, meta)
-        return toks, logits
+        return toks
 
     def _step_fused(self, now: float, finished: List[RequestResult]) -> None:
         cfg = self.cfg
-        # stop conditions that depend on token values force synchronous
-        # fetches; pure max_new_tokens stopping is host-predictable and
-        # lets the engine run a step ahead of the fetch
+        if self._desynced:
+            # a device-truncated sequence has mis-positioned dispatches
+            # in flight; resolve (flush + recompute) before planning
+            self._flush(finished)
         plan = self.scheduler.schedule(len(self._live), self.kv)
         active = [s for s in self._live
                   if s.prefill_done and not s.done][:cfg.max_batch]
+        if cfg.steps_per_dispatch > 1 and active and not plan:
+            # decode-only regime: run N steps per dispatch entirely on
+            # device.  Prefill/mixed steps stay single-step calls —
+            # admission and preemption only happen at these dispatch
+            # boundaries, every N tokens.
+            self._dispatch_decode_loop(active, now, finished)
+            return
         # grow each decoding sequence's table to cover the token being
         # written; preempt LIFO victims if the pool is out of blocks
         for seq in active:
@@ -423,11 +555,10 @@ class Engine:
             self._flush(finished)
             return
 
-        sync = (cfg.temperature > 0.0
-                or any(s.req.eos_id is not None for s in active)
-                or any(ch.req.eos_id is not None for ch in plan))
-        if sync:
-            self._flush(finished)
+        # Nothing forces a synchronous fetch anymore: sampling
+        # (temperature/top-k included) happens on device, and eos
+        # stopping is optimistic — the engine keeps dispatching and
+        # discards any tokens past the eos when the fetch reveals it.
 
         # ONE fused fixed-shape call per step; the row layout adapts to
         # the step's composition, each shape matching the cheapest legacy
@@ -465,9 +596,9 @@ class Engine:
         else:
             rows, width = cfg.mixed_chunk_rows, cfg.prefill_chunk
         tokens = np.zeros((rows, width), np.int32)
-        meta = np.zeros((5, rows), np.int32)
+        meta = np.zeros((6, rows), np.int32)
         meta[2:4] = -1
-        pos, valid, src, dst, state = meta
+        pos, valid, src, dst, state, rid_row = meta
         rids: List[Optional[int]] = [None] * rows
         emits: List[Tuple[int, _Seq, bool]] = []
         slot_of = (self.state_slots.slot_of if self.state_slots is not None
@@ -477,14 +608,13 @@ class Engine:
             pos[row] = seq.next_pos
             valid[row] = 1
             rids[row] = seq.req.rid
+            rid_row[row] = seq.req.rid
             state[row] = slot_of(seq.req.rid)
             dst[row] = seq.slot
-            if cfg.temperature <= 0.0:
-                # greedy: the slot buffer always holds this sequence's
-                # latest sampled token — no host round-trip
-                src[row] = seq.slot
-            else:
-                tokens[row, 0] = seq.out[-1]
+            # the slot buffer always holds this sequence's latest
+            # sampled token (greedy AND stochastic — sampling is on
+            # device) — no host round-trip
+            src[row] = seq.slot
             emits.append((row, seq, False))
             seq.gen_count += 1
             if seq.gen_count >= seq.req.max_new_tokens:
@@ -502,6 +632,7 @@ class Engine:
                 pos[row] = ch.start
                 valid[row] = ch.length
                 rids[row] = ch.req.rid
+                rid_row[row] = ch.req.rid
                 state[row] = slot_of(ch.req.rid)
                 if completes:
                     # prompt complete: the frontier logit is the first
@@ -519,6 +650,7 @@ class Engine:
                 pos[row] = ch.start + i
                 valid[row] = 1
                 rids[row] = ch.req.rid
+                rid_row[row] = ch.req.rid
                 if completes and i == ch.length - 1:
                     dst[row] = seq.slot
                     seq.prefill_done = True
@@ -528,20 +660,113 @@ class Engine:
                         seq.done = True
                 row += 1
 
-        toks, logits = self._dispatch(tokens, meta,
-                                      self.kv.table_array(rids))
-        self.stats["generated_tokens"] += len(emits)
+        toks = self._dispatch(tokens, meta, self.kv.table_array(rids))
         if n_dec:
             self.stats["decode_steps"] += 1
             self.stats["decode_slot_steps"] += (rows if n_pre == 0
                                                 else cfg.max_batch)
             self.stats["decode_active_slot_steps"] += n_dec
-        self._pending.append(_Inflight(toks, logits, emits, now))
-        if sync or not cfg.pipeline:
+        self._pending.append(_Inflight(toks, emits, now))
+        if not cfg.pipeline:
             self._flush(finished)
         else:
             # depth-1 pipeline: this step computes while the host reads
             # the previous step's tokens and plans the next
+            while len(self._pending) > 1:
+                self._fetch_one(finished)
+
+    def _dispatch_decode_loop(self, active: List[_Seq], now: float,
+                              finished: List[RequestResult]) -> None:
+        """One N-step on-device decode dispatch (N =
+        ``steps_per_dispatch``): reserve per-row headroom for up to N
+        tokens (blocks for block-pool families, metered tokens for
+        slot-state families), hand the device per-row step budgets, and
+        read back a packed (rows, N) token buffer one dispatch later.
+
+        Headroom reservation rules: a row asks for min(N, max_new
+        remaining) steps; ``PagedKVCache.reserve`` grants as many
+        leading positions as the pool can back (reclaiming dead
+        sliding-window blocks first), partial grants are used in full
+        this same dispatch, and a row that can't even get one step
+        triggers the flush-then-preempt path.  The device's own
+        capacity predicate (trash frontier entry) enforces the same
+        boundary, so a partially-granted row exits its loop early
+        instead of writing through the trash block."""
+        cfg = self.cfg
+        n_steps = cfg.steps_per_dispatch
+        grants: Dict[int, Tuple[int, int]] = {}    # rid -> (want, granted)
+        for seq in active:
+            if seq not in self._live:
+                continue     # evicted/preempted on an earlier row's behalf
+            want = min(n_steps, seq.req.max_new_tokens - seq.gen_count)
+            while True:
+                covered = self.kv.reserve(seq.req.rid,
+                                          seq.next_pos + want,
+                                          query_start=seq.next_pos)
+                granted = min(want, covered - seq.next_pos)
+                if granted >= 1:
+                    break
+                if self._pending:
+                    # finished-but-unfetched sequences may be holding
+                    # blocks; materialize them before sacrificing a
+                    # victim
+                    self._flush(finished)
+                    if seq not in self._live:
+                        break
+                    continue
+                if not self._preempt_one(exclude_rid=seq.req.rid):
+                    raise RuntimeError(
+                        "KV pool too small for a single sequence; raise "
+                        "num_blocks or lower max_seq_len")
+            if seq in self._live:
+                grants[seq.req.rid] = (want, granted)
+        rows_seqs = [s for s in active
+                     if s in self._live and s.req.rid in grants]
+        if not rows_seqs:
+            self._flush(finished)
+            return
+        rows = min(k for k in cfg.decode_buckets if k >= len(rows_seqs))
+        meta = np.zeros((6, rows), np.int32)
+        pos0, steps, slot, state, rid_row, eos = meta
+        eos[:] = -1
+        slot_of = (self.state_slots.slot_of if self.state_slots is not None
+                   else lambda rid: 0)
+        emits: List[Tuple[int, _Seq, bool]] = []
+        planned: Dict[int, int] = {}
+        rids: List[Optional[int]] = [None] * rows
+        for row, seq in enumerate(rows_seqs):
+            want, granted = grants[seq.req.rid]
+            pos0[row] = seq.next_pos
+            steps[row] = granted
+            slot[row] = seq.slot
+            state[row] = slot_of(seq.req.rid)
+            rid_row[row] = seq.req.rid
+            eos[row] = (-1 if seq.req.eos_id is None else seq.req.eos_id)
+            rids[row] = seq.req.rid
+            if granted < want:
+                self.stats["loop_truncations"] += 1
+            planned[row] = granted
+            emits.append((row, seq, False))
+            seq.gen_count += granted
+            if seq.gen_count >= seq.req.max_new_tokens:
+                seq.done = True
+        self.stats["model_calls"] += 1
+        self.stats["loop_dispatches"] += 1
+        max_granted = max(planned.values())
+        self.stats["decode_steps"] += max_granted
+        self.stats["decode_slot_steps"] += rows * max_granted
+        self.stats["decode_active_slot_steps"] += sum(planned.values())
+        out, counts, eos_hit, self._slot_buf, self.cache = self._loop_fn(
+            self.params, self.cache, self._slot_buf,
+            self.kv.table_array(rids), meta)
+        self._pending.append(_Inflight(out, emits, now, counts=counts,
+                                       eos_hit=eos_hit, planned=planned))
+        if not cfg.pipeline:
+            self._flush(finished)
+        else:
+            # depth-1 pipeline over depth-N loops: this N-step loop
+            # computes while the host reads the previous loop's packed
+            # tokens and plans the next dispatch
             while len(self._pending) > 1:
                 self._fetch_one(finished)
 
@@ -651,23 +876,45 @@ class Engine:
         for rows, width in shapes:
             tables = self.kv.table_array([None] * rows)
             if self.cfg.fused:
-                meta = np.zeros((5, rows), np.int32)
+                meta = np.zeros((6, rows), np.int32)
                 meta[2:4] = -1
-                toks, _ = self._dispatch(np.zeros((rows, width), np.int32),
-                                         meta, tables)
+                toks = self._dispatch(np.zeros((rows, width), np.int32),
+                                      meta, tables)
                 jax.block_until_ready(toks)
             else:
                 self._run_model_legacy(np.zeros((rows, width), np.int32),
                                        np.zeros((rows,), np.int32), tables)
+        if self._loop_fn is not None:
+            # the N-step loop compiles once per decode bucket; a meta of
+            # all-zero step budgets keeps every row inactive, so the
+            # trace touches only the trash block/slot
+            for rows in self.cfg.decode_buckets:
+                meta = np.zeros((6, rows), np.int32)
+                meta[5] = -1
+                out, _, _, self._slot_buf, self.cache = self._loop_fn(
+                    self.params, self.cache, self._slot_buf,
+                    self.kv.table_array([None] * rows), meta)
+                jax.block_until_ready(out)
         # compile dispatches are not serving work — keep the
         # calls/syncs telemetry about the traffic itself
         self.stats["model_calls"] = 0
         self.stats["host_syncs"] = 0
+        self.stats["loop_dispatches"] = 0
 
     @property
     def has_work(self) -> bool:
         return (self.scheduler.has_waiting or bool(self._live)
                 or bool(self._pending))
+
+    def device_wait(self) -> None:
+        """Block until every dispatched step's device work has finished
+        (without fetching or applying stop conditions).  Benchmarks that
+        interleave two engines on one device use this at block
+        boundaries so in-flight (pipelined) work is charged to the
+        engine that dispatched it, not to whichever engine's timer runs
+        while the device drains it."""
+        if self._pending:
+            jax.block_until_ready(self._pending[-1].toks)
 
     def step(self, now: Optional[float] = None) -> List[RequestResult]:
         """One engine iteration; returns requests finished this step."""

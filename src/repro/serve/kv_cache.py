@@ -150,13 +150,26 @@ class PagedKVCache:
         self.window = window
         self._tables: Dict[int, List[int]] = {}
 
+    def _reclaim(self, have: List[int], query_start: Optional[int]) -> None:
+        """Free leading blocks that fell entirely out of the sliding
+        window relative to ``query_start`` (trash placeholders keep
+        their logical index)."""
+        if not self.window or query_start is None:
+            return
+        dead = max(0, query_start - self.window + 1) // self.block_size
+        for b in range(min(dead, len(have))):
+            if have[b] != TRASH_BLOCK:
+                self.allocator.free([have[b]])
+                have[b] = TRASH_BLOCK
+
     def ensure_capacity(self, rid: int, num_tokens: int,
                         query_start: Optional[int] = None) -> bool:
         """Grow sequence ``rid``'s table to cover ``num_tokens`` positions.
         Returns False — no growth, though out-of-window blocks may have
         been reclaimed (that mutation is the point: freeing dead blocks
         is what gives a starved retry a chance) — if the pool cannot
-        cover the remainder.
+        cover the remainder.  All-or-nothing: a refused grow leaves the
+        table untouched (``reserve`` is the partial-growth variant).
 
         ``query_start`` is the lowest position this step's queries for
         ``rid`` will attend FROM (the decode position, or a prefill
@@ -169,12 +182,7 @@ class PagedKVCache:
                 f"sequence needs {need} blocks > blocks_per_seq="
                 f"{self.blocks_per_seq} (raise engine max_seq_len)")
         have = self._tables.setdefault(rid, [])
-        if self.window and query_start is not None:
-            dead = max(0, query_start - self.window + 1) // self.block_size
-            for b in range(min(dead, len(have))):
-                if have[b] != TRASH_BLOCK:
-                    self.allocator.free([have[b]])
-                    have[b] = TRASH_BLOCK
+        self._reclaim(have, query_start)
         grow = need - len(have)
         if grow <= 0:
             return True
@@ -183,6 +191,32 @@ class PagedKVCache:
             return False
         have.extend(blocks)
         return True
+
+    def reserve(self, rid: int, num_tokens: int,
+                query_start: Optional[int] = None) -> int:
+        """Partial-growth headroom reservation for depth-N decode
+        dispatch: grow ``rid``'s table toward ``num_tokens`` positions,
+        keeping whatever prefix the pool can cover when it cannot cover
+        everything.  Returns the number of leading token positions the
+        table now covers — the engine turns ``covered - next_pos`` into
+        the row's on-device loop-step budget, and the device-side
+        capacity predicate (trash frontier entry) enforces the same
+        boundary, so an under-reserved row truncates its loop instead
+        of corrupting cache.  Partial blocks are never wasted: the
+        caller uses every covered position this same dispatch."""
+        need = self.allocator.blocks_for(num_tokens)
+        if need > self.blocks_per_seq:
+            raise ValueError(
+                f"sequence needs {need} blocks > blocks_per_seq="
+                f"{self.blocks_per_seq} (raise engine max_seq_len)")
+        have = self._tables.setdefault(rid, [])
+        self._reclaim(have, query_start)
+        grow = need - len(have)
+        if grow > 0:
+            blocks = self.allocator.alloc(min(grow, self.allocator.num_free))
+            if blocks:
+                have.extend(blocks)
+        return len(have) * self.block_size
 
     def free_seq(self, rid: int) -> None:
         blocks = self._tables.pop(rid, None)

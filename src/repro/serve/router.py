@@ -83,6 +83,22 @@ class ReplicaRouter:
         self._load[best.replica_id] += tokens
         return best
 
+    def progress(self, rid: int, tokens: int) -> None:
+        """Return ``tokens`` of a routed request's weight early — the
+        dispatcher reports generated tokens in N-token quanta (one
+        report per engine dispatch, so depth-N decode loops amortize the
+        bookkeeping the same way they amortize dispatch), and the load
+        a replica carries decays as it actually does the work instead of
+        only at completion.  Clamped to the remaining weight; unknown
+        rids are no-ops — same composability contract as ``release``."""
+        entry = self._assignment.get(rid)
+        if entry is None:
+            return
+        replica_id, weight = entry
+        dec = min(weight, max(int(tokens), 0))
+        self._assignment[rid] = (replica_id, weight - dec)
+        self._load[replica_id] -= dec
+
     def release(self, rid: int) -> None:
         """Drop ``rid``'s assignment and return its weight to the
         replica.  Idempotent: unknown or already-released rids are

@@ -8,6 +8,14 @@ context manager) while the engine loop stays on-device; each engine
 iteration the FCFS scheduler grants at most ``prefill_token_budget``
 prompt tokens of prefill work so ongoing decodes are never starved by a
 long prompt — the serving analogue of chunked gradient sync.
+
+With ``steps_per_dispatch = N > 1`` an engine "iteration" is one
+dispatch boundary: ``schedule()`` is consulted every boundary, and a
+boundary where it grants prefill work runs as a single fused step while
+decode-only boundaries run N steps on device.  Waiting requests
+therefore see admission latency quantized to N decode tokens — the
+deliberate trade the depth-N pipeline makes (the same policy invariants
+hold; nothing here is per-token).
 """
 from __future__ import annotations
 

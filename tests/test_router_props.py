@@ -1,8 +1,9 @@
 """Hypothesis property tests for the serving router's bookkeeping
-contract: any interleaving of route/complete/release over colliding
-rids keeps loads non-negative, keeps the load sum equal to the
-outstanding routed weight, and never throws.  (A seeded random-walk
-fallback runs in test_serve.py when hypothesis is absent.)"""
+contract: any interleaving of route/progress/complete/release over
+colliding rids keeps loads non-negative, keeps the load sum equal to
+the outstanding routed weight (progress decays it in quanta, clamped at
+zero), and never throws.  (A seeded random-walk fallback runs in
+test_serve.py when hypothesis is absent.)"""
 import pytest
 pytest.importorskip("hypothesis")  # degrade to skips, not a crash
 from hypothesis import given, settings, strategies as st
@@ -11,9 +12,9 @@ from repro.core.topology import Topology
 from repro.serve import ReplicaRouter
 
 OPS = st.lists(
-    st.tuples(st.sampled_from(["route", "complete", "release"]),
+    st.tuples(st.sampled_from(["route", "progress", "complete", "release"]),
               st.integers(0, 7),           # rid: small range forces reuse
-              st.integers(1, 99)),         # token weight
+              st.integers(1, 99)),         # token weight / progress quantum
     max_size=60)
 
 
@@ -28,6 +29,10 @@ def test_router_invariants_under_any_op_order(ops, num_pods, group):
         if op == "route":
             assert router.route(rid, tokens=w) is not None
             outstanding.setdefault(rid, w)   # re-route keeps old weight
+        elif op == "progress":
+            router.progress(rid, w)
+            if rid in outstanding:
+                outstanding[rid] = max(0, outstanding[rid] - w)
         elif op == "complete":
             router.complete(rid)
             outstanding.pop(rid, None)
@@ -62,6 +67,10 @@ def test_router_backpressure_never_loses_weight(ops, capacity):
                 assert all(v > 0 for v in before.values())
             else:
                 outstanding.setdefault(rid, w)
+        elif op == "progress":
+            router.progress(rid, w)
+            if rid in outstanding:
+                outstanding[rid] = max(0, outstanding[rid] - w)
         else:
             getattr(router, op)(rid)
             outstanding.pop(rid, None)

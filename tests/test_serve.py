@@ -283,6 +283,54 @@ def test_router_backpressure_saturation_and_idle_override():
     assert router.route(2, tokens=1).replica_id == 1
 
 
+def test_router_progress_sheds_load_in_quanta():
+    """Depth-N serving reports generated tokens per dispatch; the
+    router's load must decay by those quanta (clamped to the remaining
+    weight), unknown rids must be no-ops, and completion must release
+    exactly the remainder."""
+    router = ReplicaRouter(Topology(), num_pods=2, data_size=4)
+    router.route(0, tokens=40)
+    router.progress(0, 8)
+    router.progress(0, 8)
+    assert router.loads()[0] == 24
+    assert router.outstanding() == 1             # still routed
+    router.progress(0, 999)                      # clamped, never negative
+    assert router.loads()[0] == 0
+    router.progress(1, 8)                        # unknown rid: no-op
+    router.complete(0)                           # releases the remainder
+    assert router.loads() == {0: 0, 1: 0}
+    assert router.outstanding() == 0
+    # progress keeps routing honest: partially-served heavy requests
+    # weigh less than fresh ones
+    router.route(2, tokens=30)
+    router.progress(2, 25)
+    assert router.route(3, tokens=10).replica_id == 1
+    assert router.route(4, tokens=10).replica_id == 0
+
+
+def test_paged_kv_cache_reserve_partial_grants():
+    """N-step headroom reservation: ``reserve`` grants as many leading
+    positions as the pool can back (partial allowed), agrees with
+    ``ensure_capacity`` when the pool suffices, and reclaims dead
+    sliding-window blocks before sizing the growth."""
+    kv = PagedKVCache(num_blocks=5, block_size=4, blocks_per_seq=8)
+    assert kv.reserve(7, 8) == 8                 # 2 of 4 usable blocks
+    assert kv.reserve(7, 24) == 16               # partial: pool capped
+    assert kv.num_blocks_of(7) == 4
+    assert kv.reserve(7, 12) == 16               # shrink request: no-op
+    kv.free_seq(7)
+    assert kv.reserve(8, 4) == 4
+    with pytest.raises(ValueError):
+        kv.reserve(9, 100)                       # > blocks_per_seq
+    # windowed: leading dead blocks reclaimed before new growth
+    kvw = PagedKVCache(num_blocks=5, block_size=4, blocks_per_seq=16,
+                       window=8)
+    assert kvw.reserve(7, 16) == 16              # all 4 usable blocks
+    # frontier at 16: block 0 (pos 0-3) is out of window 8 -> reclaimed,
+    # so 4 more positions fit even though the pool was exhausted
+    assert kvw.reserve(7, 20, query_start=16) == 20
+
+
 def test_router_invariants_random_walk():
     """Seeded random interleaving of route/complete/release with
     colliding rids: loads stay non-negative, their sum tracks the
@@ -295,11 +343,16 @@ def test_router_invariants_random_walk():
     for _ in range(500):
         rid = int(rng.integers(0, 8))
         op = rng.random()
-        if op < 0.5:
+        if op < 0.45:
             w = int(rng.integers(1, 64))
             assert router.route(rid, tokens=w) is not None
             outstanding.setdefault(rid, w)       # re-route keeps old weight
-        elif op < 0.75:
+        elif op < 0.65:
+            n = int(rng.integers(1, 32))
+            router.progress(rid, n)              # quantized load decay
+            if rid in outstanding:
+                outstanding[rid] = max(0, outstanding[rid] - n)
+        elif op < 0.85:
             router.complete(rid)
             outstanding.pop(rid, None)
         else:
@@ -492,8 +545,9 @@ def test_paged_step_stale_row_cannot_clobber_live_blocks(lm):
                            [10, 0],           # row 1 valid_len 0
                            [-1, -1],
                            [0, -1],
-                           [0, 0]], np.int32)  # state slots (unused here)
-        toks, _, slot_buf, cache = step(
+                           [0, 0],            # state slots (unused here)
+                           [0, 0]], np.int32)  # rids (sampling identity)
+        toks, slot_buf, cache = step(
             params, cache, slot_buf, jnp.asarray(tokens), tables,
             jnp.asarray(meta))
         return toks, cache
@@ -862,20 +916,20 @@ def test_stale_row_cannot_advance_live_recurrent_state():
         tokens = np.zeros((2, 8), np.int32)
         tokens[0, :6] = prompt
         meta = np.asarray([[0, 0], [6, 0], [-1, -1], [0, -1],
-                           [1, 0]], np.int32)
-        toks, _, slot_buf, cache = step(params, cache, slot_buf,
-                                        jnp.asarray(tokens), tables,
-                                        jnp.asarray(meta))
+                           [1, 0], [0, 0]], np.int32)
+        toks, slot_buf, cache = step(params, cache, slot_buf,
+                                     jnp.asarray(tokens), tables,
+                                     jnp.asarray(meta))
         # call 2: row 0 decodes slot 1; row 1 is stale — valid_len 0,
         # mid-sequence pos, state_slot either trash or the LIVE slot
         tokens = np.zeros((2, 1), np.int32)
         tokens[0, 0] = int(toks[0])
         tokens[1, 0] = 7                      # garbage a clobber would leak
         meta = np.asarray([[6, 3], [1, 0], [-1, -1], [0, -1],
-                           [1, 1 if stale_slot else 0]], np.int32)
-        toks, _, slot_buf, cache = step(params, cache, slot_buf,
-                                        jnp.asarray(tokens), tables,
-                                        jnp.asarray(meta))
+                           [1, 1 if stale_slot else 0], [0, 0]], np.int32)
+        toks, slot_buf, cache = step(params, cache, slot_buf,
+                                     jnp.asarray(tokens), tables,
+                                     jnp.asarray(meta))
         return toks, cache
 
     toks_stale, cache_stale = run(stale_slot=True)

@@ -1,0 +1,248 @@
+"""Depth-N on-device decode loop: engine output must be token-for-token
+identical to sequential single-request decode at every dispatch depth
+(steps_per_dispatch in {1, 4, 8}), for greedy AND seeded temperature
+sampling, across every architecture family the paged path covers —
+including when the pool starves mid-loop and the device's capacity
+predicate truncates a row's loop early.
+
+Depth equivalence is transitive through the depth-1 engine: depth 1 is
+checked against the dense sequential reference, depths 4/8 against
+depth 1 — one eager reference decode per case instead of three.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, smoke_variant
+from repro.kernels import ref as kref
+from repro.models.model import build_model
+from repro.serve import Engine, EngineConfig, Request
+
+from test_serve import _family_config, _sequential_greedy
+
+DEPTHS = (1, 4, 8)
+
+
+def _tiny_qwen2():
+    return smoke_variant(get_config("qwen2-1.5b")).replace(
+        mtp_depth=0, num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+        num_heads=2, num_kv_heads=2, head_dim=32)
+
+
+@pytest.fixture(scope="module",
+                params=["qwen2", "deepseek", "mamba", "rglru"])
+def any_lm(request):
+    cfg = (_tiny_qwen2() if request.param == "qwen2"
+           else _family_config(request.param))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _sequential_sample(model, params, prompt, max_new, *, rid, temperature,
+                       top_k=0, seed=0):
+    """Single-request dense-cache decode with the engine's exact
+    device-side sampling math: token at absolute position p is drawn
+    with key fold_in(fold_in(PRNGKey(seed), rid), p)."""
+    p = len(prompt)
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, cache_len=p + max_new)
+
+    def samp(row_logits, pos):
+        keys = kref.sample_keys(seed, np.asarray([rid]), np.asarray([pos]))
+        return int(kref.sample_tokens(
+            row_logits[None].astype(jnp.float32), keys,
+            temperature=temperature, top_k=top_k)[0])
+
+    tok = samp(logits[0, -1], p)
+    out = [tok]
+    for i in range(max_new - 1):
+        lg, cache = model.decode_step(
+            params, cache, jnp.asarray([[tok]], jnp.int32), jnp.int32(p + i))
+        tok = samp(lg[0], p + i + 1)
+        out.append(tok)
+    return out
+
+
+def _run_engine(model, params, reqs, *, spd, temperature=0.0):
+    eng = Engine(model, params, EngineConfig(
+        max_batch=3, block_size=8, num_blocks=65, max_seq_len=64,
+        prefill_chunk=16, prefill_token_budget=24, steps_per_dispatch=spd,
+        temperature=temperature))
+    res = eng.run([Request(prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens, rid=r.rid)
+                   for r in reqs])
+    return [res[r.rid].tokens for r in reqs], eng.stats
+
+
+def test_decode_loop_depth_equivalence_greedy(any_lm):
+    cfg, model, params = any_lm
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (int(p),)),
+                    max_new_tokens=int(g), rid=31000 + i)
+            for i, (p, g) in enumerate(zip(rng.integers(3, 24, 3),
+                                           rng.integers(4, 12, 3)))]
+    outs = {}
+    for spd in DEPTHS:
+        outs[spd], stats = _run_engine(model, params, reqs, spd=spd)
+        if spd > 1:
+            assert stats["loop_dispatches"] > 0      # the loop actually ran
+            # depth N amortizes dispatches: strictly fewer device calls
+            assert stats["model_calls"] < outs_calls
+        else:
+            outs_calls = stats["model_calls"]
+    for req, o1 in zip(reqs, outs[1]):
+        assert o1 == _sequential_greedy(model, params, req.prompt,
+                                        req.max_new_tokens)
+    assert outs[4] == outs[1]
+    assert outs[8] == outs[1]
+
+
+def test_decode_loop_depth_equivalence_seeded_temperature(any_lm):
+    cfg, model, params = any_lm
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (int(p),)),
+                    max_new_tokens=int(g), rid=32000 + i)
+            for i, (p, g) in enumerate(zip(rng.integers(3, 20, 2),
+                                           rng.integers(4, 10, 2)))]
+    outs = {spd: _run_engine(model, params, reqs, spd=spd,
+                             temperature=0.8)[0]
+            for spd in DEPTHS}
+    refs = [_sequential_sample(model, params, r.prompt, r.max_new_tokens,
+                               rid=r.rid, temperature=0.8) for r in reqs]
+    assert outs[1] == refs                 # engine == sequential sampler
+    assert outs[4] == outs[1]              # and depth-invariant
+    assert outs[8] == outs[1]
+    greedy = _run_engine(model, params, reqs, spd=1)[0]
+    assert outs[1] != greedy               # sampling actually stochastic
+
+
+def test_decode_loop_forced_mid_loop_pool_starvation_early_exit():
+    """A pool too small for every row's full N-step reservation forces
+    partial grants: the affected row's on-device loop must exit early at
+    the reserved frontier (never scatter through the trash block), the
+    host reconciles the short count, and the eventual output is still
+    token-identical to sequential decode."""
+    cfg = _tiny_qwen2()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(2)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (12,)),
+                    max_new_tokens=14, rid=33000 + i) for i in range(3)]
+    eng = Engine(model, params, EngineConfig(
+        max_batch=3, block_size=4, num_blocks=10, max_seq_len=32,
+        prefill_chunk=8, prefill_token_budget=16, steps_per_dispatch=8))
+    res = eng.run([Request(prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens, rid=r.rid)
+                   for r in reqs])
+    assert eng.stats["loop_truncations"] > 0     # partial grants happened
+    assert eng.stats["preemptions"] > 0          # and full starvation too
+    for r in reqs:
+        ref = _sequential_greedy(model, params, r.prompt, r.max_new_tokens)
+        assert res[r.rid].tokens == ref
+        assert len(res[r.rid].tokens) == r.max_new_tokens
+
+
+def test_eos_stops_inside_device_loop():
+    """Eos is evaluated on device mid-loop: the row emits the eos token,
+    goes inactive for the rest of the loop, and the host truncates there
+    — no per-token host sync, even though stopping depends on sampled
+    values."""
+    cfg = _tiny_qwen2()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (9,))
+    ref = _sequential_greedy(model, params, prompt, 12)
+    eos = ref[4]
+    stop = ref.index(eos) + 1
+    for spd in (1, 8):
+        eng = Engine(model, params, EngineConfig(
+            max_batch=2, block_size=8, num_blocks=33, max_seq_len=64,
+            prefill_chunk=16, prefill_token_budget=16,
+            steps_per_dispatch=spd))
+        (res,) = eng.run([Request(prompt=prompt.copy(), max_new_tokens=12,
+                                  rid=34000 + spd, eos_id=eos)]).values()
+        assert res.tokens == ref[:stop]
+
+
+def test_temperature_and_eos_pipeline_at_depth_one():
+    """Regression (sync-fallback selection): temperature-only and eos
+    requests used to force a synchronous fetch after every dispatch.
+    With sampling and eos evaluation on device, the depth-1 fast path
+    covers them: the engine must actually run a step ahead (a dispatched
+    step left unfetched across step() calls)."""
+    cfg = _tiny_qwen2()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, (9,))
+    ref = _sequential_sample(model, params, prompt, 10, rid=35000,
+                             temperature=0.7)
+    eng = Engine(model, params, EngineConfig(
+        max_batch=2, block_size=8, num_blocks=33, max_seq_len=64,
+        prefill_chunk=16, prefill_token_budget=16, temperature=0.7))
+    eng.submit(Request(prompt=prompt.copy(), max_new_tokens=10, rid=35000,
+                       eos_id=cfg.vocab_size + 7))   # never sampled
+    results, pipelined = {}, False
+    while eng.has_work:
+        for res in eng.step():
+            results[res.rid] = res
+        pipelined = pipelined or len(eng._pending) > 0
+    assert pipelined                     # an unfetched step crossed step()
+    (res,) = results.values()
+    assert res.tokens == ref
+
+
+def test_sliding_window_reclamation_at_loop_boundaries():
+    """Depth-N + window reclamation: N-step headroom is reserved AFTER
+    reclaiming blocks dead relative to the loop's first query, so a long
+    windowed generation still completes in an O(window + N) pool —
+    without preemption — and stays token-identical to the dense
+    ring-cache reference."""
+    cfg = _tiny_qwen2().replace(sliding_window=16)
+    model = build_model(cfg)
+    assert model.paged_spec.reclaim_window == 16
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, (9,))
+    eng = Engine(model, params, EngineConfig(
+        max_batch=1, block_size=4, num_blocks=11, max_seq_len=128,
+        prefill_chunk=8, prefill_token_budget=8, admission_lookahead=0,
+        steps_per_dispatch=8))
+    eng.submit(Request(prompt=prompt.copy(), max_new_tokens=110,
+                       rid=37000))
+    peak, results = 0, {}
+    while eng.has_work:
+        for r in eng.step():
+            results[r.rid] = r
+        peak = max(peak, 10 - eng.kv.allocator.num_free)
+    # window blocks (4) + frontier/straddle + 8-step headroom (2)
+    assert peak <= 8
+    assert eng.stats["preemptions"] == 0
+    assert eng.stats["loop_dispatches"] > 0
+    (res,) = results.values()
+    assert res.tokens == _sequential_greedy(model, params, prompt, 110)
+
+
+def test_slot_state_loop_truncates_without_device_tables():
+    """Pure slot-state families (no block pools on device) rely on the
+    host-metered step budget alone: a starved pool must still truncate
+    the loop and keep sequential equivalence."""
+    cfg = _family_config("mamba")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(5)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (12,)),
+                    max_new_tokens=12, rid=36000 + i) for i in range(2)]
+    eng = Engine(model, params, EngineConfig(
+        max_batch=2, block_size=4, num_blocks=10, max_seq_len=32,
+        prefill_chunk=8, prefill_token_budget=16, steps_per_dispatch=8))
+    res = eng.run([Request(prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens, rid=r.rid)
+                   for r in reqs])
+    assert eng.stats["loop_dispatches"] > 0
+    for r in reqs:
+        ref = _sequential_greedy(model, params, r.prompt, r.max_new_tokens)
+        assert res[r.rid].tokens == ref
