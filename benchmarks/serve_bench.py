@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.configs.base import get_config, smoke_variant
 from repro.models.model import build_model
-from repro.serve import Engine, EngineConfig, Request, ServeCluster
+from repro.serve import Engine, EngineConfig, Request, ServeCluster, Telemetry
 from repro.serve.scheduler import poisson_arrivals
 
 
@@ -132,14 +132,16 @@ def run_static(model, params, workload, batch_size, pad_to=16):
 # ---------------------------------------------------------------------------
 
 
-def run_cluster(model, params, workload, ecfg, num_replicas):
+def run_cluster(model, params, workload, ecfg, num_replicas,
+                trace_path=None, metrics_path=None):
     """Tokens/sec at saturation: every request submitted at t=0, one
     Engine per fast-fabric device slice, real wall clock (replicas run
     concurrently — that concurrency is the thing being measured, so no
     simulated clock here).  Per-token traffic never leaves a slice; the
     dispatcher thread only fans out admissions and collects results."""
     cluster = ServeCluster.for_replicas(model, params, ecfg,
-                                        num_replicas=num_replicas)
+                                        num_replicas=num_replicas,
+                                        trace=trace_path is not None)
     cluster.warmup()                 # per-device compiles off the clock
     reqs = [Request(prompt=w["prompt"], max_new_tokens=w["max_new_tokens"])
             for w in workload]
@@ -150,6 +152,12 @@ def run_cluster(model, params, workload, ecfg, num_replicas):
     wall = time.perf_counter() - t0
     results = cluster.results()
     assert len(results) == len(reqs)
+    if trace_path:
+        cluster.write_trace(trace_path)
+        print(f"wrote {trace_path}")
+    if metrics_path:
+        cluster.write_metrics(metrics_path)
+        print(f"wrote {metrics_path}")
     tokens = sum(len(r.tokens) for r in results.values())
     lat = [r.finish_time - t0 for r in results.values()]
     return dict(kind=f"replicas-{num_replicas}", wall_s=wall,
@@ -159,6 +167,7 @@ def run_cluster(model, params, workload, ecfg, num_replicas):
                 per_replica_tokens=[e.stats["generated_tokens"]
                                     for e in cluster.engines],
                 devices=[str(s[0]) for s in cluster.slices],
+                latency=cluster.metrics()["aggregate"]["latency"],
                 stats=dict(cluster.stats))
 
 
@@ -191,11 +200,14 @@ class _DecodePhase:
         self.rates = []                    # per-dispatch tokens/sec
 
     def step(self):
-        s = self.eng.stats
-        pre0, gen0 = s["prefill_tokens"], s["generated_tokens"]
+        s0 = self.eng.stats
+        pre0, gen0 = s0["prefill_tokens"], s0["generated_tokens"]
         t = time.perf_counter()
         finished = self.eng.step(now=0.0)
         dt = time.perf_counter() - t
+        # eng.stats is a snapshot (registry-backed), not a live dict:
+        # re-read after the step to see what it did
+        s = self.eng.stats
         if s["prefill_tokens"] == pre0 and s["generated_tokens"] > gen0:
             self.time += dt
             gen = s["generated_tokens"] - gen0
@@ -226,8 +238,8 @@ class _DecodePhase:
 
 
 def run_continuous(model, params, workload, ecfg, max_steps=None,
-                   kind="continuous"):
-    eng = Engine(model, params, ecfg)
+                   kind="continuous", telemetry=None):
+    eng = Engine(model, params, ecfg, telemetry=telemetry)
     # compile every shape this engine emits off the clock (a fresh Engine
     # has a fresh jax.jit wrapper, so warming must happen on *this* one)
     eng.warmup()
@@ -385,6 +397,16 @@ def main():
                     help="write the result rows as JSON (CI uploads this "
                     "as a workflow artifact so the perf trajectory is "
                     "recoverable from CI history)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace_event span timeline "
+                    "(open in Perfetto / chrome://tracing): per-replica "
+                    "host+device tracks and the dispatcher track.  "
+                    "Opt-in; applies to the --replicas and --steps "
+                    "(single-engine smoke) modes")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the telemetry snapshot (counters, "
+                    "gauges, TTFT/TPOT/e2e histogram percentiles, "
+                    "per-replica breakdown) as JSON")
     args = ap.parse_args()
     if args.batch is None:
         args.batch = 4 if args.dispatch_sweep else 16
@@ -505,9 +527,21 @@ def main():
         # Real wall clock — replica concurrency is the measurement.
         print(f"devices: {len(jax.devices())} "
               f"-> {args.replicas} slices")
+        if args.steps is not None:
+            # CI smoke: the multi-replica run only, no scaling gate —
+            # this mode exists to exercise trace/metrics export
+            # end-to-end (2 replicas, depth N, real worker threads)
+            emit(run_cluster(model, params, workload, ecfg, args.replicas,
+                             trace_path=args.trace,
+                             metrics_path=args.metrics_json))
+            print("[smoke] solo baseline + scaling gate skipped")
+            write_json()
+            return
         solo = run_cluster(model, params, workload, ecfg, 1)
         emit(solo)
-        multi = run_cluster(model, params, workload, ecfg, args.replicas)
+        multi = run_cluster(model, params, workload, ecfg, args.replicas,
+                            trace_path=args.trace,
+                            metrics_path=args.metrics_json)
         emit(multi)
         scaling = multi["tok_per_s"] / solo["tok_per_s"]
         print(f"replica scaling ({args.replicas} slices vs 1):  "
@@ -523,8 +557,18 @@ def main():
         return
 
     if args.steps is not None:
+        tel = (Telemetry(trace=bool(args.trace))
+               if (args.trace or args.metrics_json) else None)
         emit(run_continuous(model, params, workload, ecfg,
-                            max_steps=args.steps))
+                            max_steps=args.steps, telemetry=tel))
+        if args.trace:
+            tel.write_trace(args.trace)
+            print(f"wrote {args.trace}")
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as f:
+                json.dump(tel.registry.snapshot(), f, indent=2,
+                          default=float)
+            print(f"wrote {args.metrics_json}")
         print("[smoke] static + unfused baselines skipped")
         write_json()
         return

@@ -23,7 +23,21 @@ import numpy as np
 from repro.configs.base import get_config, smoke_variant
 from repro.models.model import build_model
 from repro.serve import (Engine, EngineConfig, Request, RequestQueue,
-                         ServeCluster)
+                         ServeCluster, Telemetry)
+
+
+def _print_metrics(snapshot):
+    """Render a registry snapshot as an aligned table."""
+    print("\n-- metrics ------------------------------------------------")
+    for section in ("counters", "gauges"):
+        for name, v in snapshot[section].items():
+            print(f"  {name:<58} {v}")
+    for name, h in snapshot["histograms"].items():
+        if not h["count"]:
+            continue
+        print(f"  {name:<58} n={h['count']:<5} "
+              f"p50={h['p50']*1e3:8.2f}ms p95={h['p95']*1e3:8.2f}ms "
+              f"p99={h['p99']*1e3:8.2f}ms")
 
 
 def main():
@@ -47,6 +61,12 @@ def main():
                     "tokens)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas, one per device slice")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry snapshot table on exit "
+                    "(counters, gauges, TTFT/TPOT/e2e percentiles)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace_event span timeline "
+                    "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch)).replace(mtp_depth=0)
@@ -64,11 +84,13 @@ def main():
     ecfg = dataclasses.replace(
         ecfg, num_blocks=(ecfg.max_batch + ecfg.admission_lookahead)
         * ecfg.blocks_per_seq + 1)
+    telemetry = Telemetry(trace=args.trace is not None)
     if args.replicas > 1:
         server = ServeCluster.for_replicas(model, params, ecfg,
-                                           num_replicas=args.replicas)
+                                           num_replicas=args.replicas,
+                                           telemetry=telemetry)
     else:
-        server = Engine(model, params, ecfg)
+        server = Engine(model, params, ecfg, telemetry=telemetry)
     server.warmup()
     print(f"serving {cfg.name}: {args.requests} requests, "
           f"{args.replicas} replica(s) x {args.batch} decode rows, "
@@ -111,6 +133,11 @@ def main():
     print(f"{tokens} tokens in {wall*1e3:.0f} ms "
           f"({tokens / wall:,.0f} tok/s), decode occupancy {occ:.2f}, "
           f"{stats['preemptions']} preemptions{per_rep}")
+    if args.metrics:
+        _print_metrics(telemetry.registry.snapshot())
+    if args.trace:
+        telemetry.write_trace(args.trace)
+        print(f"wrote {args.trace} (open in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,10 @@ model interface (Model.init_paged_cache / Model.paged_step).
   dispatcher           ServeCluster: one Engine per fast-fabric device
                        slice + worker threads; the slow layer carries
                        only admission/results/metrics
+  telemetry            metrics registry (counters/gauges/histograms with
+                       labels), per-request lifecycle tracing (TTFT /
+                       TPOT / e2e histograms), Chrome-trace span
+                       timelines, JSONL snapshot export
 """
 from repro.serve.dispatcher import ServeCluster
 from repro.serve.engine import Engine, EngineConfig, RequestResult
@@ -21,9 +25,15 @@ from repro.serve.kv_cache import (BlockAllocator, PagedKVCache,
                                   StateSlotAllocator)
 from repro.serve.router import Replica, ReplicaRouter
 from repro.serve.scheduler import Request, RequestQueue, Scheduler
+from repro.serve.telemetry import (Counter, Gauge, Histogram,
+                                   JsonlMetricsWriter, LatencyHists,
+                                   MetricsRegistry, SpanTracer, Telemetry,
+                                   TraceBook)
 
 __all__ = [
-    "BlockAllocator", "Engine", "EngineConfig", "PagedKVCache", "Replica",
-    "ReplicaRouter", "Request", "RequestQueue", "RequestResult", "Scheduler",
-    "ServeCluster", "StateSlotAllocator",
+    "BlockAllocator", "Counter", "Engine", "EngineConfig", "Gauge",
+    "Histogram", "JsonlMetricsWriter", "LatencyHists", "MetricsRegistry",
+    "PagedKVCache", "Replica", "ReplicaRouter", "Request", "RequestQueue",
+    "RequestResult", "Scheduler", "ServeCluster", "SpanTracer",
+    "StateSlotAllocator", "Telemetry", "TraceBook",
 ]

@@ -25,6 +25,7 @@ metered where they accrue.
 """
 from __future__ import annotations
 
+import json
 import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -36,16 +37,28 @@ from repro.launch.mesh import replica_slices
 from repro.serve.engine import Engine, EngineConfig, RequestResult
 from repro.serve.router import ReplicaRouter
 from repro.serve.scheduler import Request, RequestQueue
+from repro.serve.telemetry import Telemetry
 
 
 class ServeCluster:
     """One Engine per fast-fabric device slice + the dispatcher over
-    them.  Use as a context manager or call ``close()`` + ``join()``."""
+    them.  Use as a context manager or call ``close()`` + ``join()``.
+
+    All replicas share one :class:`Telemetry` bundle: replica-labeled
+    metric handles keep engines apart in the registry, the request
+    trace book sees the whole lifecycle (dispatcher stamps
+    submit/route, the owning engine stamps admit/first_token/terminal),
+    and the span tracer gets one ``replica{i}/host`` +
+    ``replica{i}/device`` track pair per worker plus a ``dispatcher``
+    track.  Pass ``trace=True`` (or a pre-built ``telemetry=``) to turn
+    span tracing on; metrics are always on."""
 
     def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
                  topology: Optional[Topology] = None, num_pods: int = 1,
                  devices=None, slices: Optional[List[Tuple]] = None,
-                 capacity_tokens: Optional[int] = None):
+                 capacity_tokens: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 trace: bool = False):
         if slices is None:
             topology = topology or Topology()
             devices = (list(jax.devices()) if devices is None
@@ -57,15 +70,18 @@ class ServeCluster:
             # the router grid degenerates to one single-device pod per
             # slice — placement bookkeeping still 1:1 with engines
             topology, num_pods, data_size = Topology(), len(slices), 1
+        self.telemetry = telemetry or Telemetry(trace=trace)
         self.router = ReplicaRouter(topology, num_pods, data_size,
                                     capacity_tokens=capacity_tokens)
+        self.router.attach_metrics(self.telemetry.registry)
         if self.router.num_replicas != len(slices):
             raise ValueError(
                 f"replica grid ({self.router.num_replicas}) != device "
                 f"slices ({len(slices)})")
         self.slices = slices
-        self.engines = [Engine(model, params, cfg, devices=s)
-                        for s in slices]
+        self.engines = [Engine(model, params, cfg, devices=s,
+                               telemetry=self.telemetry, replica_id=i)
+                        for i, s in enumerate(slices)]
         self._queues = [RequestQueue() for _ in slices]
         self._threads: List[threading.Thread] = []
         self._results: Dict[int, RequestResult] = {}
@@ -124,6 +140,7 @@ class ServeCluster:
         and serve the remainder before exiting."""
         for q in self._queues:
             q.close()
+        dropped: List[int] = []
         with self._cv:
             for i, q in enumerate(self._queues):
                 alive = (self._started and i < len(self._threads)
@@ -131,7 +148,11 @@ class ServeCluster:
                 if not alive:
                     for req in q.drain():
                         self.router.release(req.rid)
+                        if req.rid not in self._cancelled:
+                            dropped.append(req.rid)
             self._cv.notify_all()
+        for rid in dropped:       # routed-but-never-run = cancelled
+            self.telemetry.requests.finish(rid, "cancel")
 
     def join(self, timeout: Optional[float] = None) -> None:
         for t in self._threads:
@@ -156,6 +177,8 @@ class ServeCluster:
         queue.  Blocks while every replica is saturated (backpressure);
         returns the replica_id it landed on."""
         weight = int(req.prompt.size) + req.max_new_tokens
+        t_sub = time.perf_counter()
+        self.telemetry.requests.stamp(req.rid, "submit", t=t_sub)
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             replica = self.router.route(req.rid, tokens=weight)
@@ -171,6 +194,12 @@ class ServeCluster:
                         f"{self.router.capacity_tokens})")
                 self._cv.wait(wait)
                 replica = self.router.route(req.rid, tokens=weight)
+        t_routed = time.perf_counter()
+        self.telemetry.requests.stamp(req.rid, "route", t=t_routed)
+        self.telemetry.tracer.span(
+            "dispatcher", f"route:{req.rid}", t_sub, t_routed,
+            args={"rid": req.rid, "replica": replica.replica_id,
+                  "weight": weight})
         try:
             self._queues[replica.replica_id].submit(req)
         except BaseException:
@@ -195,6 +224,7 @@ class ServeCluster:
             self._cancelled.add(rid)
             self.router.release(rid)
             self._cv.notify_all()
+        self.telemetry.requests.finish(rid, "cancel")
         return True
 
     # -- the fast layer (one thread per replica) ----------------------------
@@ -264,10 +294,52 @@ class ServeCluster:
 
     @property
     def stats(self) -> Dict[str, int]:
-        """Cluster totals (sum over replicas); per-replica detail lives
-        on each engine."""
+        """Deprecated flat view: cluster totals summed over replicas.
+        Summing hides per-replica skew (a starved replica is invisible)
+        — use :meth:`metrics` for the aggregate + ``per_replica``
+        breakdown.  Kept so existing callers keep working."""
         out: Dict[str, int] = {}
         for e in self.engines:
             for k, v in e.stats.items():
                 out[k] = out.get(k, 0) + v
         return out
+
+    _LATENCY_HISTS = (("queue_wait", "request_queue_wait_s"),
+                      ("ttft", "request_ttft_s"),
+                      ("tpot", "request_tpot_s"),
+                      ("e2e", "request_e2e_s"))
+
+    def metrics(self) -> Dict[str, object]:
+        """Structured cluster metrics:
+
+        ``{"aggregate": {"counters": {...}, "latency": {ttft: {p50, p95,
+        p99, ...}, ...}}, "per_replica": {i: engine.metrics_snapshot()}}``
+
+        Aggregate counters are sums; aggregate latency histograms are
+        bucket-merges of every replica's histogram (same fixed bounds),
+        so the percentiles are cluster-wide, not averages of averages."""
+        per: Dict[int, Dict[str, object]] = {}
+        counters: Dict[str, int] = {}
+        for i, e in enumerate(self.engines):
+            snap = e.metrics_snapshot()
+            per[i] = snap
+            for k, v in snap["counters"].items():
+                counters[k] = counters.get(k, 0) + v
+        reg = self.telemetry.registry
+        latency = {k: reg.merged_histogram(name).snapshot()
+                   for k, name in self._LATENCY_HISTS}
+        return {"aggregate": {"counters": counters, "latency": latency},
+                "per_replica": per}
+
+    def write_trace(self, path: str) -> None:
+        """Export the span timeline as Chrome ``trace_event`` JSON
+        (open in Perfetto / chrome://tracing)."""
+        self.telemetry.write_trace(path)
+
+    def write_metrics(self, path: str) -> None:
+        """Write the full registry snapshot plus the structured
+        :meth:`metrics` breakdown as one JSON document."""
+        doc = {"snapshot": self.telemetry.registry.snapshot(),
+               "metrics": self.metrics()}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, default=float)

@@ -70,6 +70,40 @@ import numpy as np
 from repro.models import transformer
 from repro.serve.kv_cache import PagedKVCache, StateSlotAllocator
 from repro.serve.scheduler import Request, RequestQueue, Scheduler
+from repro.serve.telemetry import LatencyHists, MetricsRegistry, Telemetry
+
+# the flat integer counters the deprecated ``Engine.stats`` view exposes
+# (plus ``jit_compiles``); each is a registry counter labeled with this
+# engine's replica/arch
+_STAT_KEYS = ("steps", "decode_steps", "decode_slot_steps",
+              "decode_active_slot_steps", "prefill_tokens",
+              "generated_tokens", "preemptions", "model_calls",
+              "host_syncs", "loop_dispatches", "loop_truncations")
+
+_DISPATCH_PHASES = ("prefill", "decode", "mixed", "loop")
+
+
+class _EngineMetrics:
+    """Struct-of-handles for the engine hot path: every event is one
+    attribute access + an int add, no registry lookup, no lock, no
+    device sync.  Labels: ``replica`` (the engine's replica_id) and
+    ``arch`` (the model config name)."""
+
+    def __init__(self, registry: MetricsRegistry, **labels):
+        for k in _STAT_KEYS:
+            setattr(self, k, registry.counter("engine_" + k, **labels))
+        self.jit_compiles = registry.counter("engine_jit_compiles",
+                                             **labels)
+        self.live_seqs = registry.gauge("engine_live_seqs", **labels)
+        self.state_slots_free = registry.gauge("engine_state_slots_free",
+                                               **labels)
+        # host wall time per device dispatch, split by step phase —
+        # the per-phase timing that tells a compute-bound regime from a
+        # dispatch-bound one without opening a trace
+        self.dispatch_s = {ph: registry.histogram("engine_dispatch_s",
+                                                  phase=ph, **labels)
+                           for ph in _DISPATCH_PHASES}
+        self.latency = LatencyHists(registry, **labels)
 
 
 @dataclass(frozen=True)
@@ -187,6 +221,8 @@ class _Inflight:
     counts: Optional[jax.Array] = None    # (rows,) int32, loop only
     eos_hit: Optional[jax.Array] = None   # (rows,) bool, loop only
     planned: Optional[Dict[int, int]] = None   # row -> granted steps
+    t_disp: float = 0.0                   # tracer only: dispatch-return time
+    label: str = ""                       # tracer only: device-span name
 
 
 class Engine:
@@ -205,7 +241,9 @@ class Engine:
     behaviour: whatever device JAX defaults to."""
 
     def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 replica_id: int = 0):
         if model.paged_step is None or model.paged_spec is None:
             raise ValueError(
                 f"{model.cfg.name}: family {model.cfg.family!r} has no "
@@ -222,6 +260,20 @@ class Engine:
                 "the N-step on-device decode loop requires the fused "
                 "step (device-side sampling + slot buffer)")
         self.model = model
+        # telemetry: one bundle per frontend (ServeCluster shares its
+        # bundle across replicas; a standalone engine builds its own).
+        # Counters/gauges are always on; span tracing only runs when the
+        # bundle's tracer is enabled.
+        self.telemetry = telemetry or Telemetry()
+        self.replica_id = replica_id
+        self._m = _EngineMetrics(self.telemetry.registry,
+                                 replica=replica_id, arch=model.cfg.name)
+        self._host_track = f"replica{replica_id}/host"
+        self._dev_track = f"replica{replica_id}/device"
+        # device spans serialize on one track: the device executes
+        # dispatches in order, so span k+1 starts no earlier than span
+        # k's end even when the host dispatched it mid-flight
+        self._dev_tail = 0.0
         self.devices = tuple(devices) if devices else None
         self.device = self.devices[0] if self.devices else None
         if self.device is not None:
@@ -239,11 +291,16 @@ class Engine:
         self.kv = PagedKVCache(
             cfg.num_blocks, cfg.block_size, cfg.blocks_per_seq,
             window=self.spec.reclaim_window if self.spec.has_blocks else 0)
+        self.kv.attach_metrics(self.telemetry.registry,
+                               replica=replica_id, arch=model.cfg.name)
         self.state_slots = (StateSlotAllocator(cfg.num_slots + 1)
                             if self.spec.has_state else None)
         self.scheduler = Scheduler(
             cfg.max_batch + cfg.admission_lookahead, cfg.prefill_chunk,
             cfg.prefill_token_budget, max_chunks_per_step=cfg.prefill_rows)
+        self.scheduler.attach_metrics(self.telemetry.registry,
+                                      replica=replica_id,
+                                      arch=model.cfg.name)
         self.cache = model.init_paged_cache(
             cfg.num_blocks, cfg.block_size, cfg.max_batch,
             cfg.blocks_per_seq, num_state_slots=cfg.num_slots + 1)
@@ -302,12 +359,69 @@ class Engine:
         # dispatcher turns these into router progress (load accounting
         # in N-token quanta)
         self._progress_tokens: Dict[int, int] = {}
-        # telemetry for the bench report
-        self.stats = {"steps": 0, "decode_steps": 0, "decode_slot_steps": 0,
-                      "decode_active_slot_steps": 0, "prefill_tokens": 0,
-                      "generated_tokens": 0, "preemptions": 0,
-                      "model_calls": 0, "host_syncs": 0,
-                      "loop_dispatches": 0, "loop_truncations": 0}
+        # jit-compile watermark: sum of the jitted wrappers' cache sizes
+        # last time we looked.  Any growth mid-serving is a compile the
+        # warmup missed (the PR-5 recompile bug, now a permanent metric
+        # + regression test).  Wrappers are shared through
+        # Model.jit_cache, so an engine observes — and counts — cache
+        # growth its siblings trigger too; per-replica jit_compiles is a
+        # guard metric, not an attribution.
+        self._jit_cache_seen: Optional[int] = None
+        self._note_compiles()
+
+    # -- stats (deprecated flat view) ---------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Deprecated flat counter view (kept so pre-telemetry callers
+        and tests don't break); the registry behind ``self.telemetry``
+        is the real interface — use ``metrics_snapshot()`` for counters
+        plus latency percentiles."""
+        out = {k: int(getattr(self._m, k).value) for k in _STAT_KEYS}
+        out["jit_compiles"] = int(self._m.jit_compiles.value)
+        return out
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """This replica's counters + derived-latency percentiles."""
+        m = self._m
+        return {"counters": self.stats,
+                "latency": {"queue_wait": m.latency.queue_wait.snapshot(),
+                            "ttft": m.latency.ttft.snapshot(),
+                            "tpot": m.latency.tpot.snapshot(),
+                            "e2e": m.latency.e2e.snapshot()},
+                "dispatch_s": {ph: h.snapshot()
+                               for ph, h in m.dispatch_s.items()
+                               if h.count}}
+
+    # -- jit-compile accounting ---------------------------------------------
+
+    def _jit_fns(self):
+        return [f for f in (self._step_fn, self._loop_fn, self._legacy_fn)
+                if f is not None]
+
+    @staticmethod
+    def _jit_cache_total(fns) -> Optional[int]:
+        """Sum of compiled-executable cache sizes across ``fns``; None
+        when the running JAX doesn't expose ``_cache_size`` (the metric
+        then stays 0 rather than guessing)."""
+        total, supported = 0, False
+        for f in fns:
+            try:
+                total += int(f._cache_size())
+                supported = True
+            except Exception:
+                pass
+        return total if supported else None
+
+    def _note_compiles(self) -> None:
+        cur = self._jit_cache_total(self._jit_fns())
+        if cur is None:
+            return
+        if self._jit_cache_seen is None:
+            self._jit_cache_seen = cur
+        elif cur > self._jit_cache_seen:
+            self._m.jit_compiles.inc(cur - self._jit_cache_seen)
+            self._jit_cache_seen = cur
 
     # -- submission ---------------------------------------------------------
 
@@ -317,6 +431,9 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new_tokens={total} exceeds "
                 f"max_seq_len={self.cfg.max_seq_len}")
+        # first-wins no-op when the dispatcher already stamped it at the
+        # cluster front door
+        self.telemetry.requests.stamp(req.rid, "submit")
         self.scheduler.add(req)
 
     # -- internals ----------------------------------------------------------
@@ -345,7 +462,12 @@ class Engine:
             if slot is None:
                 raise RuntimeError("state-slot pool exhausted despite a "
                                    "free token-buffer slot (engine bug)")
+            self._m.state_slots_free.set(self.state_slots.num_free)
         self._live.append(seq)
+        # first-wins: a preempted request's re-admit keeps its original
+        # admit stamp, so queue-wait stays submit -> first admission
+        self.telemetry.requests.stamp(req.rid, "admit")
+        self._m.live_seqs.set(len(self._live))
         return seq
 
     def _evict(self, seq: _Seq, now: float, finished: List[RequestResult]
@@ -366,6 +488,15 @@ class Engine:
             arrival_time=seq.req.arrival_time,
             first_token_time=seq.first_token_time, finish_time=now,
             preempted=self._preempt_counts.pop(seq.req.rid, 0)))
+        self._m.live_seqs.set(len(self._live))
+        if self.state_slots is not None:
+            self._m.state_slots_free.set(self.state_slots.num_free)
+        # terminal lifecycle event (real wall clock, not the caller's
+        # possibly-simulated ``now``): derives queue-wait/TTFT/TPOT/e2e
+        # into this replica's latency histograms
+        self.telemetry.requests.finish(
+            seq.req.rid, "complete", tokens=len(regen) + len(seq.out),
+            replica=self.replica_id, hists=self._m.latency)
 
     def _preempt_seq(self, victim: _Seq) -> None:
         """Send ``victim`` back to the waiting line (recompute mode) and
@@ -387,7 +518,11 @@ class Engine:
         if victim.prefill_done:
             self._first_token_times[rid] = victim.first_token_time
         self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
-        self.stats["preemptions"] += 1
+        self._m.preemptions.inc()
+        self.telemetry.requests.note_preempt(rid)
+        self._m.live_seqs.set(len(self._live))
+        if self.state_slots is not None:
+            self._m.state_slots_free.set(self.state_slots.num_free)
 
     def _preempt_one(self, exclude_rid: int) -> bool:
         """Kick the most recently admitted live sequence back to the
@@ -408,7 +543,7 @@ class Engine:
         predicate) never inflate ``generated_tokens`` or the router
         progress quanta."""
         self._progress_tokens[rid] = self._progress_tokens.get(rid, 0) + n
-        self.stats["generated_tokens"] += n
+        self._m.generated_tokens.inc(n)
 
     def drain_progress(self) -> Dict[int, int]:
         """Tokens materialized per request since the last drain — the
@@ -429,8 +564,22 @@ class Engine:
         slot / spare token slot or in blocks that are rewritten before
         any live query attends them, so nothing live is perturbed."""
         rec = self._pending.popleft()
+        tr = self.telemetry.tracer
+        ts0 = time.perf_counter() if tr.enabled else 0.0
         toks = np.asarray(rec.toks)            # sync point
-        self.stats["host_syncs"] += 1
+        self._m.host_syncs.inc()
+        if tr.enabled:
+            ts1 = time.perf_counter()
+            tr.span(self._host_track, "fetch", ts0, ts1)
+            if rec.label:
+                # the host-observed envelope of this dispatch's device
+                # execution: from dispatch return (or the previous
+                # dispatch's completion — the device runs them in
+                # order) to the fetch landing
+                d0 = max(rec.t_disp, self._dev_tail)
+                d1 = max(ts1, d0)
+                tr.span(self._dev_track, rec.label, d0, d1)
+                self._dev_tail = d1
         if rec.counts is not None:             # N-step decode-loop record
             counts = np.asarray(rec.counts)
             eos_hit = np.asarray(rec.eos_hit)
@@ -472,6 +621,7 @@ class Engine:
                 # first token before eviction — keep the original TTFT
                 seq.first_token_time = self._first_token_times.pop(
                     seq.req.rid, rec.now)
+                self.telemetry.requests.stamp(seq.req.rid, "first_token")
             if (seq.req.eos_id is not None and tok == seq.req.eos_id
                     and not seq.done):
                 # eos discovered after later steps were optimistically
@@ -506,13 +656,15 @@ class Engine:
         host->device transfers total; the layer broadcast of the tables
         happens inside the jit.  Returns the (B,) sampled tokens; no
         logits ever leave the device."""
-        self.stats["model_calls"] += 1
+        self._m.model_calls.inc()
         toks, self._slot_buf, self.cache = self._step_fn(
             self.params, self.cache, self._slot_buf, tokens, tables, meta)
         return toks
 
     def _step_fused(self, now: float, finished: List[RequestResult]) -> None:
         cfg = self.cfg
+        tr = self.telemetry.tracer
+        t_plan0 = time.perf_counter() if tr.enabled else 0.0
         if self._desynced:
             # a device-truncated sequence has mis-positioned dispatches
             # in flight; resolve (flush + recompute) before planning
@@ -525,7 +677,8 @@ class Engine:
             # device.  Prefill/mixed steps stay single-step calls —
             # admission and preemption only happen at these dispatch
             # boundaries, every N tokens.
-            self._dispatch_decode_loop(active, now, finished)
+            self._dispatch_decode_loop(active, now, finished,
+                                       t_plan0=t_plan0)
             return
         # grow each decoding sequence's table to cover the token being
         # written; preempt LIFO victims if the pool is out of blocks
@@ -616,6 +769,7 @@ class Engine:
             # device) — no host round-trip
             src[row] = seq.slot
             emits.append((row, seq, False))
+            self.telemetry.requests.note_dispatch(seq.req.rid)
             seq.gen_count += 1
             if seq.gen_count >= seq.req.max_new_tokens:
                 seq.done = True
@@ -624,7 +778,8 @@ class Engine:
             seq = self._seq_of(ch.req.rid)
             if seq is None:                    # fresh admission
                 seq = self._admit(ch.req)
-            self.stats["prefill_tokens"] += ch.length
+            self._m.prefill_tokens.inc(ch.length)
+            self.telemetry.requests.stamp(ch.req.rid, "prefill_start")
             completes = ch.start + ch.length >= len(ch.req.prompt)
             chunk_tok = ch.req.prompt[ch.start:ch.start + ch.length]
             if width > 1:                      # chunk-wide: one row/chunk
@@ -660,13 +815,26 @@ class Engine:
                         seq.done = True
                 row += 1
 
+        phase = ("decode" if n_pre == 0
+                 else "prefill" if n_dec == 0 else "mixed")
+        t0 = time.perf_counter()
         toks = self._dispatch(tokens, meta, self.kv.table_array(rids))
+        t1 = time.perf_counter()
+        self._m.dispatch_s[phase].observe(t1 - t0)
         if n_dec:
-            self.stats["decode_steps"] += 1
-            self.stats["decode_slot_steps"] += (rows if n_pre == 0
-                                                else cfg.max_batch)
-            self.stats["decode_active_slot_steps"] += n_dec
-        self._pending.append(_Inflight(toks, emits, now))
+            self._m.decode_steps.inc()
+            self._m.decode_slot_steps.inc(rows if n_pre == 0
+                                          else cfg.max_batch)
+            self._m.decode_active_slot_steps.inc(n_dec)
+        rec = _Inflight(toks, emits, now)
+        if tr.enabled:
+            tr.span(self._host_track, "plan", t_plan0, t0,
+                    args={"decode_rows": n_dec, "prefill_tokens": n_pre})
+            tr.span(self._host_track, f"dispatch:{phase}", t0, t1,
+                    args={"rows": rows, "width": width})
+            rec.t_disp = t1
+            rec.label = f"{phase}[{rows}x{width}]"
+        self._pending.append(rec)
         if not cfg.pipeline:
             self._flush(finished)
         else:
@@ -676,7 +844,8 @@ class Engine:
                 self._fetch_one(finished)
 
     def _dispatch_decode_loop(self, active: List[_Seq], now: float,
-                              finished: List[RequestResult]) -> None:
+                              finished: List[RequestResult],
+                              t_plan0: float = 0.0) -> None:
         """One N-step on-device decode dispatch (N =
         ``steps_per_dispatch``): reserve per-row headroom for up to N
         tokens (blocks for block-pool families, metered tokens for
@@ -744,23 +913,37 @@ class Engine:
             eos[row] = (-1 if seq.req.eos_id is None else seq.req.eos_id)
             rids[row] = seq.req.rid
             if granted < want:
-                self.stats["loop_truncations"] += 1
+                self._m.loop_truncations.inc()
             planned[row] = granted
             emits.append((row, seq, False))
+            self.telemetry.requests.note_dispatch(seq.req.rid)
             seq.gen_count += granted
             if seq.gen_count >= seq.req.max_new_tokens:
                 seq.done = True
-        self.stats["model_calls"] += 1
-        self.stats["loop_dispatches"] += 1
+        self._m.model_calls.inc()
+        self._m.loop_dispatches.inc()
         max_granted = max(planned.values())
-        self.stats["decode_steps"] += max_granted
-        self.stats["decode_slot_steps"] += rows * max_granted
-        self.stats["decode_active_slot_steps"] += sum(planned.values())
+        self._m.decode_steps.inc(max_granted)
+        self._m.decode_slot_steps.inc(rows * max_granted)
+        self._m.decode_active_slot_steps.inc(sum(planned.values()))
+        tr = self.telemetry.tracer
+        t0 = time.perf_counter()
         out, counts, eos_hit, self._slot_buf, self.cache = self._loop_fn(
             self.params, self.cache, self._slot_buf,
             self.kv.table_array(rids), meta)
-        self._pending.append(_Inflight(out, emits, now, counts=counts,
-                                       eos_hit=eos_hit, planned=planned))
+        t1 = time.perf_counter()
+        self._m.dispatch_s["loop"].observe(t1 - t0)
+        rec = _Inflight(out, emits, now, counts=counts,
+                        eos_hit=eos_hit, planned=planned)
+        if tr.enabled:
+            tr.span(self._host_track, "plan", t_plan0, t0,
+                    args={"decode_rows": len(rows_seqs),
+                          "steps": n_steps})
+            tr.span(self._host_track, "dispatch:loop", t0, t1,
+                    args={"rows": rows, "steps": n_steps})
+            rec.t_disp = t1
+            rec.label = f"loop[{rows}x{n_steps}]"
+        self._pending.append(rec)
         if not cfg.pipeline:
             self._flush(finished)
         else:
@@ -774,8 +957,8 @@ class Engine:
 
     def _run_model_legacy(self, tokens: np.ndarray, pos: np.ndarray,
                           tables: np.ndarray):
-        self.stats["model_calls"] += 1
-        self.stats["host_syncs"] += 1
+        self._m.model_calls.inc()
+        self._m.host_syncs.inc()
         cache = transformer.with_block_tables(self.cache,
                                               jnp.asarray(tables))
         logits, self.cache = self._legacy_fn(
@@ -801,7 +984,8 @@ class Engine:
         logits = self._run_model_legacy(tokens, pos,
                                         self.kv.table_array(rids))
         for row, ch in enumerate(chunks):
-            self.stats["prefill_tokens"] += ch.length
+            self._m.prefill_tokens.inc(ch.length)
+            self.telemetry.requests.stamp(ch.req.rid, "prefill_start")
             if ch.start + ch.length >= len(ch.req.prompt):
                 seq = self._seq_of(ch.req.rid)
                 tok = self._sample(logits[row, ch.length - 1])
@@ -810,7 +994,8 @@ class Engine:
                 seq.prefill_done = True
                 seq.first_token_time = self._first_token_times.pop(
                     ch.req.rid, now)
-                self.stats["generated_tokens"] += 1
+                self.telemetry.requests.stamp(ch.req.rid, "first_token")
+                self._m.generated_tokens.inc()
                 if (len(seq.out) >= seq.req.max_new_tokens
                         or (seq.req.eos_id is not None
                             and tok == seq.req.eos_id)):
@@ -844,14 +1029,14 @@ class Engine:
             rids[row] = seq.req.rid
         logits = self._run_model_legacy(tokens, pos,
                                         self.kv.table_array(rids))
-        self.stats["decode_steps"] += 1
-        self.stats["decode_slot_steps"] += b
-        self.stats["decode_active_slot_steps"] += len(active)
+        self._m.decode_steps.inc()
+        self._m.decode_slot_steps.inc(b)
+        self._m.decode_active_slot_steps.inc(len(active))
         for row, seq in enumerate(active):
             tok = self._sample(logits[row, 0])
             seq.out.append(tok)
             seq.gen_count = len(seq.out)
-            self.stats["generated_tokens"] += 1
+            self._m.generated_tokens.inc()
             done = (len(seq.out) >= seq.req.max_new_tokens
                     or (seq.req.eos_id is not None
                         and tok == seq.req.eos_id))
@@ -895,11 +1080,17 @@ class Engine:
                     self.params, self.cache, self._slot_buf,
                     self.kv.table_array([None] * rows), meta)
                 jax.block_until_ready(out)
-        # compile dispatches are not serving work — keep the
-        # calls/syncs telemetry about the traffic itself
-        self.stats["model_calls"] = 0
-        self.stats["host_syncs"] = 0
-        self.stats["loop_dispatches"] = 0
+        # compile dispatches are not serving work — keep the calls/syncs
+        # telemetry about the traffic itself, the dispatch-time
+        # histograms free of compile outliers, and re-baseline the
+        # jit-compile watermark so only MID-SERVING compiles (the bug
+        # class the jit_compiles metric guards against) count
+        for h in (self._m.model_calls, self._m.host_syncs,
+                  self._m.loop_dispatches, self._m.jit_compiles):
+            h.reset()
+        for h in self._m.dispatch_s.values():
+            h.reset()
+        self._jit_cache_seen = self._jit_cache_total(self._jit_fns())
 
     @property
     def has_work(self) -> bool:
@@ -926,7 +1117,8 @@ class Engine:
             plan = self.scheduler.schedule(len(self._live), self.kv)
             self._prefill_legacy(plan, now, finished)
             self._decode_legacy(now, finished)
-        self.stats["steps"] += 1
+        self._m.steps.inc()
+        self._note_compiles()
         return finished
 
     def run(self, requests: Sequence[Request] = (),

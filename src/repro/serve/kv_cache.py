@@ -149,6 +149,25 @@ class PagedKVCache:
         self.blocks_per_seq = blocks_per_seq
         self.window = window
         self._tables: Dict[int, List[int]] = {}
+        self._m: Optional[dict] = None
+
+    def attach_metrics(self, registry, **labels) -> None:
+        """Wire pool occupancy / reserve-pressure metrics into a
+        :class:`repro.serve.telemetry.MetricsRegistry`.  Optional: with
+        no registry attached the cache is metrics-free (zero overhead).
+        """
+        self._m = {
+            "free": registry.gauge("kv_blocks_free", **labels),
+            "reclaimed": registry.counter("kv_blocks_reclaimed", **labels),
+            "reserves": registry.counter("kv_reserve_requests", **labels),
+            "truncations": registry.counter(
+                "kv_reserve_truncations", **labels),
+        }
+        self._m["free"].set(self.allocator.num_free)
+
+    def _sync_free(self) -> None:
+        if self._m is not None:
+            self._m["free"].set(self.allocator.num_free)
 
     def _reclaim(self, have: List[int], query_start: Optional[int]) -> None:
         """Free leading blocks that fell entirely out of the sliding
@@ -157,10 +176,14 @@ class PagedKVCache:
         if not self.window or query_start is None:
             return
         dead = max(0, query_start - self.window + 1) // self.block_size
+        freed = 0
         for b in range(min(dead, len(have))):
             if have[b] != TRASH_BLOCK:
                 self.allocator.free([have[b]])
                 have[b] = TRASH_BLOCK
+                freed += 1
+        if freed and self._m is not None:
+            self._m["reclaimed"].inc(freed)
 
     def ensure_capacity(self, rid: int, num_tokens: int,
                         query_start: Optional[int] = None) -> bool:
@@ -185,11 +208,14 @@ class PagedKVCache:
         self._reclaim(have, query_start)
         grow = need - len(have)
         if grow <= 0:
+            self._sync_free()
             return True
         blocks = self.allocator.alloc(grow)
         if blocks is None:
+            self._sync_free()
             return False
         have.extend(blocks)
+        self._sync_free()
         return True
 
     def reserve(self, rid: int, num_tokens: int,
@@ -212,10 +238,17 @@ class PagedKVCache:
         have = self._tables.setdefault(rid, [])
         self._reclaim(have, query_start)
         grow = need - len(have)
+        granted_all = True
         if grow > 0:
             blocks = self.allocator.alloc(min(grow, self.allocator.num_free))
             if blocks:
                 have.extend(blocks)
+            granted_all = len(blocks or ()) == grow
+        if self._m is not None:
+            self._m["reserves"].inc()
+            if not granted_all:
+                self._m["truncations"].inc()
+            self._sync_free()
         return len(have) * self.block_size
 
     def free_seq(self, rid: int) -> None:
@@ -224,6 +257,7 @@ class PagedKVCache:
             live = [b for b in blocks if b != TRASH_BLOCK]
             if live:
                 self.allocator.free(live)
+        self._sync_free()
 
     def num_blocks_of(self, rid: int) -> int:
         """Pool blocks ``rid`` actually holds (reclaimed window

@@ -58,6 +58,25 @@ class ReplicaRouter:
         self.capacity_tokens = capacity_tokens
         self._load: Dict[int, int] = {r.replica_id: 0 for r in self.replicas}
         self._assignment: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, weight)
+        self._m: Optional[dict] = None
+
+    def attach_metrics(self, registry, **labels) -> None:
+        """Wire routing decisions / per-replica load gauges into a
+        :class:`repro.serve.telemetry.MetricsRegistry`.  Optional: with
+        no registry attached the router is metrics-free."""
+        self._m = {
+            "routed": registry.counter("router_routed", **labels),
+            "refusals": registry.counter("router_refusals", **labels),
+            "released": registry.counter("router_released", **labels),
+            "progress": registry.counter("router_progress_tokens", **labels),
+            "load": {r.replica_id: registry.gauge(
+                         "router_load_tokens", replica=r.replica_id, **labels)
+                     for r in self.replicas},
+        }
+
+    def _sync_load(self, replica_id: int) -> None:
+        if self._m is not None:
+            self._m["load"][replica_id].set(self._load[replica_id])
 
     @property
     def num_replicas(self) -> int:
@@ -78,9 +97,14 @@ class ReplicaRouter:
         load = self._load[best.replica_id]
         if (self.capacity_tokens is not None and load > 0
                 and load + tokens > self.capacity_tokens):
+            if self._m is not None:
+                self._m["refusals"].inc()
             return None
         self._assignment[rid] = (best.replica_id, tokens)
         self._load[best.replica_id] += tokens
+        if self._m is not None:
+            self._m["routed"].inc()
+            self._sync_load(best.replica_id)
         return best
 
     def progress(self, rid: int, tokens: int) -> None:
@@ -98,6 +122,9 @@ class ReplicaRouter:
         dec = min(weight, max(int(tokens), 0))
         self._assignment[rid] = (replica_id, weight - dec)
         self._load[replica_id] -= dec
+        if self._m is not None:
+            self._m["progress"].inc(dec)
+            self._sync_load(replica_id)
 
     def release(self, rid: int) -> None:
         """Drop ``rid``'s assignment and return its weight to the
@@ -109,6 +136,9 @@ class ReplicaRouter:
             return
         replica_id, weight = entry
         self._load[replica_id] -= weight
+        if self._m is not None:
+            self._m["released"].inc()
+            self._sync_load(replica_id)
 
     def complete(self, rid: int) -> None:
         """A routed request finished; same semantics as ``release``."""

@@ -138,6 +138,17 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.prefilling: List[Request] = []   # admitted, prompt not done
         self._progress = {}                   # rid -> tokens prefilled
+        self._m: Optional[dict] = None
+
+    def attach_metrics(self, registry, **labels) -> None:
+        """Wire queue-depth / admission metrics into a
+        :class:`repro.serve.telemetry.MetricsRegistry`.  Optional: with
+        no registry attached the scheduler is metrics-free."""
+        self._m = {
+            "waiting": registry.gauge("sched_waiting", **labels),
+            "prefilling": registry.gauge("sched_prefilling", **labels),
+            "admitted": registry.counter("sched_admitted", **labels),
+        }
 
     def add(self, req: Request) -> None:
         self.waiting.append(req)
@@ -193,6 +204,11 @@ class Scheduler:
             if length < len(req.prompt):
                 self.prefilling.append(req)
         assert sum(c.length for c in plan) <= self.prefill_token_budget
+        if self._m is not None:
+            self._m["waiting"].set(len(self.waiting))
+            self._m["prefilling"].set(len(self.prefilling))
+            if admitted:
+                self._m["admitted"].inc(admitted)
         return plan
 
     def preempt(self, req: Request, generated: Sequence[int]) -> Request:

@@ -1,0 +1,389 @@
+"""Serving telemetry: registry/histogram unit invariants, request
+lifecycle trace invariants on real engine runs, the jit-compile
+steady-state regression guard, Chrome trace well-formedness, and the
+cluster metrics()/stats back-compat contract.
+
+The load-bearing invariants (also property-tested in
+test_telemetry_props.py):
+  * histogram bucket counts sum to the observation counter;
+  * every submitted request reaches exactly ONE terminal event
+    (``trace_double_terminals == 0``);
+  * TTFT <= e2e (both measured from the same submit stamp);
+  * span timestamps are monotonic and disjoint-or-nested per track;
+  * after warmup, steady-state serving triggers zero new jit compiles
+    at every dispatch depth and under mixed prefill/decode.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.model import build_model
+from repro.serve import (Engine, EngineConfig, Request, ServeCluster,
+                         Telemetry)
+from repro.serve.telemetry import (Counter, Gauge, Histogram,
+                                   JsonlMetricsWriter, MetricsRegistry)
+
+from test_serve_decode_loop import _tiny_qwen2
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = _tiny_qwen2()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=3, block_size=8, num_blocks=65, max_seq_len=64,
+                prefill_chunk=16, prefill_token_budget=24)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _requests(cfg, n, rid0, seed=0, pmax=20, gmax=10):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (int(rng.integers(3, pmax)),)),
+                    max_new_tokens=int(rng.integers(3, gmax)),
+                    rid=rid0 + i)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_basics():
+    c, g = Counter(), Gauge()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g.set(7)
+    g.dec(2)
+    g.inc()
+    assert g.value == 6
+
+
+def test_histogram_bucket_counts_sum_to_counter():
+    h = Histogram(buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.1, 0.5, 1.0, 5.0, 50.0, 500.0):
+        h.observe(v)
+    assert sum(h.counts) == h.count == 7
+    assert h.min == 0.05 and h.max == 500.0
+    assert h.counts[-1] == 2                      # overflow bucket
+    snap = h.snapshot()
+    assert snap["count"] == 7
+    assert h.min <= snap["p50"] <= snap["p95"] <= snap["p99"] <= h.max
+
+
+def test_histogram_single_observation_reports_itself():
+    h = Histogram()
+    h.observe(0.42)
+    s = h.snapshot()
+    assert s["p50"] == pytest.approx(0.42)
+    assert s["p99"] == pytest.approx(0.42)
+    assert s["mean"] == pytest.approx(0.42)
+
+
+def test_histogram_merge_requires_same_buckets_and_sums():
+    a, b = Histogram(), Histogram()
+    for v in (0.001, 0.02, 3.0):
+        a.observe(v)
+    for v in (0.5, 200.0):
+        b.observe(v)
+    a.merge(b)
+    assert a.count == 5
+    assert sum(a.counts) == 5
+    assert a.max == 200.0
+    with pytest.raises(ValueError):
+        a.merge(Histogram(buckets=(1.0, 2.0)))
+
+
+def test_registry_get_or_create_and_labels():
+    reg = MetricsRegistry()
+    c1 = reg.counter("x", replica=0)
+    c2 = reg.counter("x", replica=0)
+    c3 = reg.counter("x", replica=1)
+    assert c1 is c2 and c1 is not c3
+    c1.inc(3)
+    c3.inc(1)
+    snap = reg.snapshot()
+    assert snap["counters"]["x{replica=0}"] == 3
+    assert snap["counters"]["x{replica=1}"] == 1
+    reg.histogram("lat", replica=0).observe(0.5)
+    reg.histogram("lat", replica=1).observe(2.0)
+    merged = reg.merged_histogram("lat")
+    assert merged.count == 2 and merged.max == 2.0
+
+
+def test_jsonl_metrics_writer(tmp_path):
+    reg = MetricsRegistry()
+    c = reg.counter("ticks")
+    path = str(tmp_path / "metrics.jsonl")
+    with JsonlMetricsWriter(reg, path, interval_s=0.01) as w:
+        c.inc(5)
+    rows = [json.loads(line) for line in open(path)]
+    assert rows                                   # final snapshot at stop
+    assert rows[-1]["counters"]["ticks"] == 5
+    assert "time" in rows[-1]
+
+
+# ---------------------------------------------------------------------------
+# engine lifecycle invariants
+# ---------------------------------------------------------------------------
+
+
+def _check_lifecycle(telemetry, rids, tokens_of=None):
+    book = telemetry.requests
+    assert book.double_terminals.value == 0
+    for rid in rids:
+        tr = book.get(rid)
+        assert tr is not None and tr.terminal == "complete"
+        s = tr.stamps
+        assert s["submit"] <= s["admit"] <= s["first_token"] <= s["complete"]
+        ttft = s["first_token"] - s["submit"]
+        e2e = s["complete"] - s["submit"]
+        assert 0.0 <= ttft <= e2e
+        if tokens_of is not None:
+            assert tr.tokens == tokens_of[rid]
+
+
+@pytest.mark.parametrize("spd", [1, 8])
+def test_engine_run_trace_invariants(tiny_lm, spd):
+    cfg, model, params = tiny_lm
+    tel = Telemetry()
+    eng = Engine(model, params, _ecfg(steps_per_dispatch=spd),
+                 telemetry=tel)
+    reqs = _requests(cfg, 4, 41000, seed=spd)
+    res = eng.run([Request(prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens, rid=r.rid)
+                   for r in reqs])
+    _check_lifecycle(tel, [r.rid for r in reqs],
+                     tokens_of={rid: len(v.tokens)
+                                for rid, v in res.items()})
+    snap = eng.metrics_snapshot()
+    assert snap["latency"]["e2e"]["count"] == len(reqs)
+    assert snap["latency"]["ttft"]["count"] == len(reqs)
+    # histograms observe at most once per request
+    assert snap["latency"]["tpot"]["count"] <= len(reqs)
+    # the flat stats view and the registry snapshot are the same numbers
+    assert snap["counters"] == eng.stats
+
+
+def test_engine_stats_dict_back_compat(tiny_lm):
+    """eng.stats keeps the old flat-dict contract: plain ints, the
+    legacy key set, values that accumulate across a run."""
+    cfg, model, params = tiny_lm
+    eng = Engine(model, params, _ecfg())
+    eng.run([Request(prompt=r.prompt.copy(),
+                     max_new_tokens=r.max_new_tokens, rid=r.rid)
+             for r in _requests(cfg, 2, 42000)])
+    s = eng.stats
+    for k in ("steps", "decode_steps", "prefill_tokens",
+              "generated_tokens", "preemptions", "model_calls",
+              "host_syncs", "loop_dispatches", "loop_truncations",
+              "jit_compiles"):
+        assert isinstance(s[k], int), k
+    assert s["generated_tokens"] > 0
+    assert s["steps"] > 0
+
+
+def test_kv_and_scheduler_gauges_settle_to_idle(tiny_lm):
+    cfg, model, params = tiny_lm
+    tel = Telemetry()
+    eng = Engine(model, params, _ecfg(), telemetry=tel)
+    eng.run([Request(prompt=r.prompt.copy(),
+                     max_new_tokens=r.max_new_tokens, rid=r.rid)
+             for r in _requests(cfg, 3, 43000)])
+    g = tel.registry.snapshot()["gauges"]
+    label = f"{{arch={cfg.name},replica=0}}"
+    # everything drained: free-list full again, nothing live or waiting
+    assert g["kv_blocks_free" + label] == 64      # num_blocks - trash
+    assert g["engine_live_seqs" + label] == 0
+    assert g["sched_waiting" + label] == 0
+    assert g["sched_prefilling" + label] == 0
+
+
+def test_preemption_counted_and_single_terminal(tiny_lm):
+    """The starvation workload from the decode-loop tests: preempted +
+    re-admitted requests must still reach exactly one terminal and keep
+    their ORIGINAL submit/admit stamps (first stamp wins)."""
+    cfg, model, params = tiny_lm
+    tel = Telemetry()
+    eng = Engine(model, params, EngineConfig(
+        max_batch=3, block_size=4, num_blocks=10, max_seq_len=32,
+        prefill_chunk=8, prefill_token_budget=16, steps_per_dispatch=8),
+        telemetry=tel)
+    rng = np.random.default_rng(2)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (12,)),
+                    max_new_tokens=14, rid=44000 + i) for i in range(3)]
+    eng.run([Request(prompt=r.prompt.copy(),
+                     max_new_tokens=r.max_new_tokens, rid=r.rid)
+             for r in reqs])
+    assert eng.stats["preemptions"] > 0
+    _check_lifecycle(tel, [r.rid for r in reqs])
+    assert sum(t.preemptions for t in tel.requests.traces()) \
+        == eng.stats["preemptions"]
+
+
+# ---------------------------------------------------------------------------
+# jit-compile steady-state guard (the PR-5 recompile bug, as a metric)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spd", [1, 8])
+def test_zero_new_compiles_in_steady_state(tiny_lm, spd):
+    """After warmup, serving mixed prefill/decode traffic at any
+    dispatch depth must hit only warm jit caches: a recompile mid-serve
+    is a multi-second stall on a real model."""
+    cfg, model, params = tiny_lm
+    eng = Engine(model, params, _ecfg(steps_per_dispatch=spd))
+    if eng._jit_cache_total(eng._jit_fns()) is None:
+        pytest.skip("jit cache size introspection unsupported")
+    eng.warmup()
+    # mixed traffic: staggered arrivals keep prefill chunks interleaving
+    # with decode (mixed-phase dispatches), long + short generations
+    reqs = _requests(cfg, 5, 45000 + spd, seed=7, pmax=24, gmax=14)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.002 * i
+    eng.run([Request(prompt=r.prompt.copy(),
+                     max_new_tokens=r.max_new_tokens, rid=r.rid,
+                     arrival_time=r.arrival_time) for r in reqs])
+    assert eng.stats["prefill_tokens"] > 0
+    assert eng.stats["decode_steps"] > 0
+    assert eng.stats["jit_compiles"] == 0, \
+        "steady-state serving recompiled after warmup"
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+
+def _spans_by_track(events):
+    names = {e["tid"]: e["args"]["name"] for e in events if e["ph"] == "M"}
+    out = {}
+    for e in events:
+        if e["ph"] == "X":
+            out.setdefault(names[e["tid"]], []).append(e)
+    return out
+
+
+def _assert_disjoint_or_nested(spans, eps=0.5):
+    """Chrome's renderer assumes spans on one track are disjoint or
+    properly nested; eps is float slop in microseconds."""
+    spans = sorted(spans, key=lambda e: (e["ts"], -e["dur"]))
+    stack = []
+    for e in spans:
+        t0, t1 = e["ts"], e["ts"] + e["dur"]
+        assert e["dur"] >= 0.0
+        while stack and t0 >= stack[-1] - eps:
+            stack.pop()
+        if stack:
+            assert t1 <= stack[-1] + eps, "overlapping spans on one track"
+        stack.append(t1)
+
+
+def test_engine_trace_export_well_formed(tiny_lm, tmp_path):
+    cfg, model, params = tiny_lm
+    tel = Telemetry(trace=True)
+    eng = Engine(model, params, _ecfg(steps_per_dispatch=8), telemetry=tel)
+    eng.run([Request(prompt=r.prompt.copy(),
+                     max_new_tokens=r.max_new_tokens, rid=r.rid)
+             for r in _requests(cfg, 3, 46000)])
+    path = str(tmp_path / "trace.json")
+    tel.write_trace(path)
+    doc = json.load(open(path))
+    events = doc["traceEvents"]
+    assert events
+    for e in events:
+        assert "ph" in e and "ts" in e and "pid" in e and "tid" in e
+    by_track = _spans_by_track(events)
+    assert "replica0/host" in by_track and "replica0/device" in by_track
+    for spans in by_track.values():
+        _assert_disjoint_or_nested(spans)
+    # the host track carries the span vocabulary the README documents
+    host_names = {e["name"].split(":")[0] for e in by_track["replica0/host"]}
+    assert "plan" in host_names and "dispatch" in host_names \
+        and "fetch" in host_names
+
+
+def test_tracing_off_is_free(tiny_lm):
+    """With tracing off (the default) no span events accumulate — the
+    enabled flag gates every collection point."""
+    cfg, model, params = tiny_lm
+    tel = Telemetry()
+    eng = Engine(model, params, _ecfg(), telemetry=tel)
+    eng.run([Request(prompt=r.prompt.copy(),
+                     max_new_tokens=r.max_new_tokens, rid=r.rid)
+             for r in _requests(cfg, 2, 47000)])
+    assert tel.tracer.events() == []
+
+
+# ---------------------------------------------------------------------------
+# cluster metrics: aggregate + per-replica, stats back-compat, cancel
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_metrics_per_replica_and_flat_backcompat(tiny_lm, tmp_path):
+    cfg, model, params = tiny_lm
+    cl = ServeCluster.for_replicas(model, params, _ecfg(),
+                                   num_replicas=2, trace=True)
+    reqs = _requests(cfg, 6, 48000)
+    res = cl.run([Request(prompt=r.prompt.copy(),
+                          max_new_tokens=r.max_new_tokens, rid=r.rid)
+                  for r in reqs])
+    assert len(res) == len(reqs)
+    m = cl.metrics()
+    assert sorted(m["per_replica"]) == [0, 1]
+    # aggregate counters are exactly the per-replica sums, and the
+    # deprecated flat stats view agrees with them
+    for k, v in m["aggregate"]["counters"].items():
+        assert v == sum(m["per_replica"][i]["counters"][k] for i in (0, 1))
+    assert cl.stats == m["aggregate"]["counters"]
+    # aggregate latency percentiles cover every request, per replica
+    # counts split them
+    agg = m["aggregate"]["latency"]
+    assert agg["e2e"]["count"] == len(reqs)
+    assert agg["ttft"]["p50"] <= agg["e2e"]["p99"] + 1e-9
+    split = [m["per_replica"][i]["latency"]["e2e"]["count"] for i in (0, 1)]
+    assert sum(split) == len(reqs)
+    # lifecycle: dispatcher stamped submit/route, engines the rest
+    _check_lifecycle(cl.telemetry, [r.rid for r in reqs])
+    for r in reqs:
+        tr = cl.telemetry.requests.get(r.rid)
+        assert tr.stamps["submit"] <= tr.stamps["route"] \
+            <= tr.stamps["admit"]
+        assert tr.replica in (0, 1)
+    # trace: one host+device track pair per replica + dispatcher track
+    cl.write_trace(str(tmp_path / "cluster_trace.json"))
+    doc = json.load(open(tmp_path / "cluster_trace.json"))
+    tracks = {e["args"]["name"] for e in doc["traceEvents"]
+              if e["ph"] == "M"}
+    assert {"replica0/host", "replica1/host", "dispatcher"} <= tracks
+    # metrics JSON export round-trips
+    cl.write_metrics(str(tmp_path / "metrics.json"))
+    exported = json.load(open(tmp_path / "metrics.json"))
+    assert exported["metrics"]["aggregate"]["latency"]["e2e"]["count"] \
+        == len(reqs)
+
+
+def test_cluster_cancel_is_the_terminal(tiny_lm):
+    cfg, model, params = tiny_lm
+    cl = ServeCluster.for_replicas(model, params, _ecfg(), num_replicas=2)
+    (req,) = _requests(cfg, 1, 49000)
+    cl.submit(req)                    # never started: no worker threads
+    assert cl.cancel(req.rid)
+    tr = cl.telemetry.requests.get(req.rid)
+    assert tr.terminal == "cancel"
+    assert cl.telemetry.requests.double_terminals.value == 0
+    reg = cl.telemetry.registry.snapshot()["counters"]
+    assert reg["requests_cancelled"] == 1
+    cl.close()
+    cl.join()
+    # close() after cancel must not double-terminate the drained rid
+    assert cl.telemetry.requests.double_terminals.value == 0

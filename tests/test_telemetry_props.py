@@ -1,0 +1,134 @@
+"""Property tests for the telemetry primitives (hypothesis), alongside
+test_router_props.py's treatment of the router.
+
+Histogram: under ANY observation sequence the bucket counts sum to the
+observation counter, percentiles stay inside [min, max] and are
+monotone in q, and merging partitions is equivalent to observing the
+concatenation.
+
+TraceBook: under ANY interleaving of stamps / preempts / terminals,
+every rid ends with at most one terminal, extra terminal attempts are
+counted (never silently merged), first stamps win, and the derived
+latencies are non-negative whenever stamp times are non-decreasing —
+which the generated op sequences guarantee by construction, exactly
+like real callers (perf_counter is monotonic).
+"""
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.telemetry import (DEFAULT_LATENCY_BUCKETS, Histogram,
+                                   LatencyHists, MetricsRegistry,
+                                   TraceBook)
+
+values = st.floats(min_value=0.0, max_value=1e4,
+                   allow_nan=False, allow_infinity=False)
+
+
+@settings(deadline=None, max_examples=200)
+@given(st.lists(values, max_size=200))
+def test_histogram_invariants(vs):
+    h = Histogram()
+    for v in vs:
+        h.observe(v)
+    assert sum(h.counts) == h.count == len(vs)
+    if vs:
+        lo, hi = min(vs), max(vs)
+        assert h.min == lo and h.max == hi
+        ps = [h.percentile(q) for q in (0.0, 0.25, 0.5, 0.95, 0.99, 1.0)]
+        for p in ps:
+            assert lo - 1e-9 <= p <= hi + 1e-9
+        assert ps == sorted(ps)                   # monotone in q
+    else:
+        assert h.percentile(0.5) == 0.0
+
+
+@settings(deadline=None, max_examples=100)
+@given(st.lists(values, max_size=100), st.lists(values, max_size=100))
+def test_histogram_merge_equals_concat(a_vs, b_vs):
+    a, b, both = Histogram(), Histogram(), Histogram()
+    for v in a_vs:
+        a.observe(v)
+        both.observe(v)
+    for v in b_vs:
+        b.observe(v)
+        both.observe(v)
+    a.merge(b)
+    assert a.counts == both.counts
+    assert a.count == both.count
+    assert a.sum == pytest.approx(both.sum)
+    for q in (0.5, 0.95, 0.99):
+        assert a.percentile(q) == pytest.approx(both.percentile(q))
+
+
+# -- lifecycle op sequences -------------------------------------------------
+
+# ops over a small rid universe; time strictly increases op to op, so
+# stamp ordering mirrors any real caller's perf_counter timestamps
+_ops = st.lists(
+    st.tuples(st.integers(0, 3),                        # rid
+              st.sampled_from(["submit", "route", "admit",
+                               "prefill_start", "first_token",
+                               "preempt", "dispatch",
+                               "complete", "cancel"])),
+    max_size=120)
+
+
+@settings(deadline=None, max_examples=200)
+@given(_ops)
+def test_tracebook_exactly_one_terminal(ops):
+    reg = MetricsRegistry()
+    book = TraceBook(reg)
+    hists = LatencyHists(reg)
+    t = 0.0
+    attempts = {}                                 # rid -> terminal tries
+    for rid, op in ops:
+        t += 1.0
+        if op in ("complete", "cancel"):
+            attempts[rid] = attempts.get(rid, 0) + 1
+            book.finish(rid, op, tokens=3, hists=hists, t=t)
+        elif op == "preempt":
+            book.note_preempt(rid)
+        elif op == "dispatch":
+            book.note_dispatch(rid)
+        else:
+            book.stamp(rid, op, t=t)
+    terminals = sum(1 for tr in book.traces() if tr.terminal is not None)
+    assert terminals == sum(1 for n in attempts.values() if n)
+    # every extra attempt was refused and counted, never merged
+    assert book.double_terminals.value \
+        == sum(n - 1 for n in attempts.values())
+    # derived latencies are non-negative under monotonic stamps
+    for h in (hists.queue_wait, hists.ttft, hists.tpot, hists.e2e):
+        assert sum(h.counts) == h.count
+        assert h.count == 0 or h.min >= 0.0
+    # TTFT <= e2e: both derived from the same submit stamp
+    for tr in book.traces():
+        s = tr.stamps
+        if tr.terminal == "complete" and "submit" in s \
+                and "first_token" in s:
+            assert (s["first_token"] - s["submit"]
+                    <= s[tr.terminal] - s["submit"])
+
+
+@settings(deadline=None, max_examples=100)
+@given(_ops)
+def test_tracebook_first_stamp_wins(ops):
+    book = TraceBook(MetricsRegistry())
+    t = 0.0
+    first = {}                                    # (rid, event) -> time
+    done = set()                                  # terminal closes a record
+    for rid, op in ops:
+        t += 1.0
+        if op in ("preempt", "dispatch"):
+            continue
+        if op in ("complete", "cancel"):
+            book.finish(rid, op, t=t)
+            done.add(rid)
+        else:
+            book.stamp(rid, op, t=t)
+            if rid not in done:
+                first.setdefault((rid, op), t)
+    for (rid, op), t0 in first.items():
+        assert book.get(rid).stamps[op] == t0
