@@ -160,15 +160,18 @@ def run_cluster(model, params, workload, ecfg, num_replicas,
         print(f"wrote {metrics_path}")
     tokens = sum(len(r.tokens) for r in results.values())
     lat = [r.finish_time - t0 for r in results.values()]
+    m = cluster.metrics()
     return dict(kind=f"replicas-{num_replicas}", wall_s=wall,
                 tok_per_s=tokens / max(wall, 1e-9), tokens=tokens,
                 p50=float(np.percentile(lat, 50)),
                 p99=float(np.percentile(lat, 99)),
-                per_replica_tokens=[e.stats["generated_tokens"]
-                                    for e in cluster.engines],
+                per_replica_tokens=[
+                    m["per_replica"][i]["counters"]["generated_tokens"]
+                    for i in range(cluster.num_replicas)],
                 devices=[str(s[0]) for s in cluster.slices],
-                latency=cluster.metrics()["aggregate"]["latency"],
-                stats=dict(cluster.stats))
+                tp_degrees=[e.tp_degree for e in cluster.engines],
+                latency=m["aggregate"]["latency"],
+                stats=dict(m["aggregate"]["counters"]))
 
 
 # ---------------------------------------------------------------------------
@@ -200,14 +203,14 @@ class _DecodePhase:
         self.rates = []                    # per-dispatch tokens/sec
 
     def step(self):
-        s0 = self.eng.stats
+        s0 = self.eng.metrics_snapshot()["counters"]
         pre0, gen0 = s0["prefill_tokens"], s0["generated_tokens"]
         t = time.perf_counter()
         finished = self.eng.step(now=0.0)
         dt = time.perf_counter() - t
-        # eng.stats is a snapshot (registry-backed), not a live dict:
+        # counters are a snapshot (registry-backed), not a live dict:
         # re-read after the step to see what it did
-        s = self.eng.stats
+        s = self.eng.metrics_snapshot()["counters"]
         if s["prefill_tokens"] == pre0 and s["generated_tokens"] > gen0:
             self.time += dt
             gen = s["generated_tokens"] - gen0
@@ -238,8 +241,8 @@ class _DecodePhase:
 
 
 def run_continuous(model, params, workload, ecfg, max_steps=None,
-                   kind="continuous", telemetry=None):
-    eng = Engine(model, params, ecfg, telemetry=telemetry)
+                   kind="continuous", telemetry=None, devices=None):
+    eng = Engine(model, params, ecfg, telemetry=telemetry, devices=devices)
     # compile every shape this engine emits off the clock (a fresh Engine
     # has a fresh jax.jit wrapper, so warming must happen on *this* one)
     eng.warmup()
@@ -268,8 +271,9 @@ def run_continuous(model, params, workload, ecfg, max_steps=None,
         steps += 1
         if max_steps is not None and steps >= max_steps:
             break
-    occ = (eng.stats["decode_active_slot_steps"]
-           / max(eng.stats["decode_slot_steps"], 1))
+    c = eng.metrics_snapshot()["counters"]
+    occ = (c["decode_active_slot_steps"]
+           / max(c["decode_slot_steps"], 1))
     return dict(kind=kind, wall_s=clock,
                 tok_per_s=tokens / max(clock, 1e-9),
                 p50=float(np.percentile(latencies, 50)) if latencies else 0.0,
@@ -279,7 +283,9 @@ def run_continuous(model, params, workload, ecfg, max_steps=None,
                 decode_tok_per_s_med=phase.tok_per_s_med,
                 decode_tok_per_s_best=phase.tok_per_s_best,
                 steps_per_dispatch=ecfg.steps_per_dispatch,
-                stats=dict(eng.stats))
+                tp_degree=eng.tp_degree,
+                tp_collective_ops=int(eng._m.tp_collective_ops.value),
+                stats=dict(c))
 
 
 def run_paired(model, params, workload, cfg_a, cfg_b, kinds=("a", "b"),
@@ -326,8 +332,9 @@ def run_paired(model, params, workload, cfg_a, cfg_b, kinds=("a", "b"),
             phases[i].time += dwait
     out = []
     for i, e in enumerate(engines):
-        occ = (e.stats["decode_active_slot_steps"]
-               / max(e.stats["decode_slot_steps"], 1))
+        c = e.metrics_snapshot()["counters"]
+        occ = (c["decode_active_slot_steps"]
+               / max(c["decode_slot_steps"], 1))
         out.append(dict(
             kind=kinds[i], wall_s=clock[i],
             tok_per_s=toks[i] / max(clock[i], 1e-9),
@@ -337,7 +344,7 @@ def run_paired(model, params, workload, cfg_a, cfg_b, kinds=("a", "b"),
             decode_tok_per_s=phases[i].tok_per_s,
             decode_tok_per_s_med=phases[i].tok_per_s_med,
             decode_tok_per_s_best=phases[i].tok_per_s_best,
-            stats=dict(e.stats)))
+            stats=dict(c)))
     return out
 
 
@@ -386,6 +393,22 @@ def main():
                     "bandwidth-bound on this host, depth is neutral "
                     "there and that regime analysis is part of the "
                     "README serve section)")
+    ap.add_argument("--tp-sweep", action="store_true",
+                    help="measure tensor-parallel replica widths: solo "
+                    "runs of ONE engine over a 1..N-device slice on the "
+                    "decode-heavy saturation workload (tiny model — the "
+                    "same config the equivalence tests shard), gating on "
+                    "zero steady-state jit_compiles after warmup at "
+                    "every width.  On CPU virtual devices the tokens/sec "
+                    "column is a dispatch-cost trajectory, not a "
+                    "speedup: shards share the same cores, so the value "
+                    "of this sweep is the scaling JSON artifact + the "
+                    "compile-stability gate, with real scaling measured "
+                    "on accelerator fabric")
+    ap.add_argument("--tp-widths", default="1,2",
+                    help="comma-separated slice widths for --tp-sweep "
+                    "(widths beyond the visible device count are "
+                    "skipped)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas on device slices (ServeCluster); "
                     ">1 measures tokens/sec scaling vs one replica at "
@@ -434,6 +457,41 @@ def main():
                         max_seq_len=160,
                         prefill_chunk=16, prefill_token_budget=64,
                         steps_per_dispatch=args.steps_per_dispatch)
+
+    if args.tp_sweep:
+        widths = [int(w) for w in args.tp_widths.split(",")]
+        # tiny model: the TP equivalence tests' config — big enough to
+        # shard on every family axis (2 kv heads / 128 hidden), small
+        # enough that CI's virtual devices finish in seconds
+        cfg = cfg.replace(num_layers=2, d_model=64, d_ff=128,
+                          vocab_size=128, num_heads=2, num_kv_heads=2,
+                          head_dim=32)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        wl = make_decode_workload(cfg, args.requests, seed=args.seed)
+        devs = jax.devices()
+        print(f"serve_bench tp sweep: {cfg.name}  "
+              f"requests={args.requests} batch={args.batch}  "
+              f"widths {widths} over {len(devs)} devices")
+        compile_churn = []
+        for w in widths:
+            if w > len(devs):
+                print(f"tp-{w}: skipped ({len(devs)} devices visible)")
+                continue
+            row = run_continuous(
+                model, params, wl, ecfg, max_steps=args.steps,
+                kind=f"tp-{w}", devices=tuple(devs[:w]))
+            if row["stats"]["jit_compiles"] != 0:
+                compile_churn.append((w, row["stats"]["jit_compiles"]))
+            print(f"   tp-{w}: collective ops per decode step = "
+                  f"{row['tp_collective_ops']}")
+            emit(row)
+        write_json()
+        if compile_churn:
+            print(f"FAIL: steady-state jit_compiles after warmup: "
+                  f"{compile_churn}")
+            sys.exit(1)
+        return
 
     if args.dispatch_sweep:
         depths = [int(d) for d in args.sweep_depths.split(",")]

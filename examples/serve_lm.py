@@ -6,7 +6,9 @@ continuous-batching engine admits them mid-flight, interleaves budgeted
 prefill chunks with batched decode over the paged KV cache, and evicts
 finished sequences as their slots free.  With ``--replicas N`` the
 requests fan out token-weighted over N engines, one per fast-fabric
-device slice (ServeCluster).
+device slice (ServeCluster); a multi-device slice serves
+tensor-parallel across its devices (8 virtual devices / 2 replicas
+below = two tp=4 engines).
 
     PYTHONPATH=src python -m examples.serve_lm [--arch qwen2-1.5b]
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
@@ -124,12 +126,18 @@ def main():
               f"  first-token={(r.first_token_time - t0)*1e3:6.1f} ms"
               f"  tokens={r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
     tokens = sum(len(r.tokens) for r in results.values())
-    stats = server.stats
+    if args.replicas > 1:
+        m = server.metrics()
+        stats = m["aggregate"]["counters"]
+        per_rep = ("  per-replica tokens=" + str(
+            [m["per_replica"][i]["counters"]["generated_tokens"]
+             for i in range(server.num_replicas)])
+            + "  tp=" + str([e.tp_degree for e in server.engines]))
+    else:
+        stats = server.metrics_snapshot()["counters"]
+        per_rep = ""
     occ = (stats["decode_active_slot_steps"]
            / max(stats["decode_slot_steps"], 1))
-    per_rep = ("" if args.replicas == 1 else
-               "  per-replica tokens=" + str(
-                   [e.stats["generated_tokens"] for e in server.engines]))
     print(f"{tokens} tokens in {wall*1e3:.0f} ms "
           f"({tokens / wall:,.0f} tok/s), decode occupancy {occ:.2f}, "
           f"{stats['preemptions']} preemptions{per_rep}")

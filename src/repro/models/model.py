@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,10 +68,21 @@ class PagedSpec:
                    every block live forever — no reclamation).  The
                    engine's PagedKVCache frees leading blocks past this
                    window as the frontier advances.
+      tp_spec      per-family tensor-parallel serving layout: which axis
+                   of each layer kind a TP engine shards over its
+                   replica sub-mesh's "model" axis.  (kind, layout)
+                   pairs, e.g. ("attn", "kv-heads"), ("moe", "experts"),
+                   ("ssm", "channels"); MLA records "latent-replicated"
+                   because the compressed latent pool is shared across
+                   heads by construction (only the head projections
+                   split).  Engines consult this for telemetry; the
+                   actual specs live in ``sharding.serve_param_pspecs``
+                   / ``serve_cache_pspecs``.
     """
     has_blocks: bool
     has_state: bool
     reclaim_window: int = 0
+    tp_spec: Tuple[Tuple[str, str], ...] = ()
 
     @property
     def width1_mixed(self) -> bool:
@@ -160,11 +171,24 @@ def build_model(cfg: ModelConfig) -> Model:
     kinds = cfg.layer_kinds()
     windows = [transformer._layer_window(cfg, k) for k in kinds
                if k in ("attn", "local_attn")]
+    tp: Dict[str, str] = {}
+    for k in kinds:
+        if k in ("attn", "local_attn"):
+            tp[k] = "latent-replicated/heads" if cfg.mla else "kv-heads"
+        elif k in ("ssm", "rglru"):
+            tp[k] = "channels"
+    for f in set(cfg.ffn_kinds()):
+        if f == "moe":
+            tp["moe"] = "experts"
+        elif cfg.family != "ssm":   # mamba blocks have no separate mlp
+            tp["mlp"] = "hidden"
+    tp["embed"] = tp["lm_head"] = "vocab"
     spec = PagedSpec(
         has_blocks=bool(windows),
         has_state=any(k in ("ssm", "rglru") for k in kinds),
         reclaim_window=(max(windows)
-                        if windows and all(w > 0 for w in windows) else 0))
+                        if windows and all(w > 0 for w in windows) else 0),
+        tp_spec=tuple(sorted(tp.items())))
     return Model(
         cfg=cfg,
         init=functools.partial(transformer.init_params, cfg=cfg),

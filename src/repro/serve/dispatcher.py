@@ -7,15 +7,16 @@ serving system, not a placement diagram:
 
   * each *fast-fabric* device slice (``launch.mesh.replica_slices`` —
     one slice per ``Topology`` fast group, pod-major) gets its own
-    ``Engine`` with its own paged cache, block allocator, and committed
-    params copy; ALL per-token traffic — block-table rebuilds, KV
-    scatter/gather, sampled-token feedback — stays inside the slice,
-    driven by a dedicated worker thread;
+    ``Engine`` serving TENSOR-PARALLEL across the slice: params and
+    paged pools shard over a per-replica ("model",) sub-mesh, and ALL
+    per-token traffic — block-table rebuilds, KV scatter/gather,
+    sampled-token feedback, the TP collectives XLA inserts — stays
+    inside the slice, driven by a dedicated worker thread;
   * the dispatcher is the *slow* layer: it carries only admission
-    (token-weighted fan-out through ``ReplicaRouter``), completed
-    ``RequestResult``s, and metrics.  Nothing per-token ever crosses
-    it, mirroring how the phase-2 all-reduce never sits on the training
-    hot path.
+    (token-weighted fan-out through ``ReplicaRouter``, load and
+    capacity normalized by slice width), completed ``RequestResult``s,
+    and metrics.  Nothing per-token ever crosses it, mirroring how the
+    phase-2 all-reduce never sits on the training hot path.
 
 Backpressure closes the loop: routing weights requests by outstanding
 prompt+decode tokens, and when every replica is past
@@ -71,8 +72,13 @@ class ServeCluster:
             # slice — placement bookkeeping still 1:1 with engines
             topology, num_pods, data_size = Topology(), len(slices), 1
         self.telemetry = telemetry or Telemetry(trace=trace)
+        # router capacity/load normalize by ACTUAL slice width (explicit
+        # slices may be heterogeneous, and the shared-single-device
+        # fallback's grid replicas claim width 1 regardless of grid shape)
         self.router = ReplicaRouter(topology, num_pods, data_size,
-                                    capacity_tokens=capacity_tokens)
+                                    capacity_tokens=capacity_tokens,
+                                    widths={i: len(s)
+                                            for i, s in enumerate(slices)})
         self.router.attach_metrics(self.telemetry.registry)
         if self.router.num_replicas != len(slices):
             raise ValueError(
@@ -97,8 +103,9 @@ class ServeCluster:
                      ) -> "ServeCluster":
         """``num_replicas`` engines over the visible devices: honest
         disjoint slices when the device count divides evenly (each slice
-        is one fast-fabric group), round-robin shared single-device
-        slices otherwise (CPU smoke on a 1-device host)."""
+        is one fast-fabric group, served tensor-parallel at
+        tp=devices/replicas), round-robin shared single-device slices
+        otherwise (CPU smoke on a 1-device host)."""
         devices = list(jax.devices()) if devices is None else list(devices)
         n = len(devices)
         if num_replicas <= n and n % num_replicas == 0:
@@ -291,18 +298,6 @@ class ServeCluster:
     def loads(self) -> Dict[int, int]:
         with self._cv:
             return self.router.loads()
-
-    @property
-    def stats(self) -> Dict[str, int]:
-        """Deprecated flat view: cluster totals summed over replicas.
-        Summing hides per-replica skew (a starved replica is invisible)
-        — use :meth:`metrics` for the aggregate + ``per_replica``
-        breakdown.  Kept so existing callers keep working."""
-        out: Dict[str, int] = {}
-        for e in self.engines:
-            for k, v in e.stats.items():
-                out[k] = out.get(k, 0) + v
-        return out
 
     _LATENCY_HISTS = (("queue_wait", "request_queue_wait_s"),
                       ("ttft", "request_ttft_s"),

@@ -58,6 +58,7 @@ evicted slot's stale state.
 from __future__ import annotations
 
 import functools
+import re
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -66,14 +67,16 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import sharding
 from repro.models import transformer
 from repro.serve.kv_cache import PagedKVCache, StateSlotAllocator
 from repro.serve.scheduler import Request, RequestQueue, Scheduler
 from repro.serve.telemetry import LatencyHists, MetricsRegistry, Telemetry
 
-# the flat integer counters the deprecated ``Engine.stats`` view exposes
-# (plus ``jit_compiles``); each is a registry counter labeled with this
+# the flat integer counters in ``metrics_snapshot()["counters"]`` (plus
+# ``jit_compiles``); each is a registry counter labeled with this
 # engine's replica/arch
 _STAT_KEYS = ("steps", "decode_steps", "decode_slot_steps",
               "decode_active_slot_steps", "prefill_tokens",
@@ -97,6 +100,15 @@ class _EngineMetrics:
         self.live_seqs = registry.gauge("engine_live_seqs", **labels)
         self.state_slots_free = registry.gauge("engine_state_slots_free",
                                                **labels)
+        # tensor-parallel visibility: slice width, and the number of
+        # collective ops XLA placed in the compiled decode step (0 for
+        # single-device replicas; the per-dispatch wall time those
+        # collectives cost is already inside the dispatch_s histograms,
+        # so width + op count + dispatch_s give collective-time
+        # attribution without device profiling)
+        self.tp_degree = registry.gauge("engine_tp_degree", **labels)
+        self.tp_collective_ops = registry.gauge("engine_tp_collective_ops",
+                                                **labels)
         # host wall time per device dispatch, split by step phase —
         # the per-phase timing that tells a compute-bound regime from a
         # dispatch-bound one without opening a trace
@@ -226,19 +238,25 @@ class _Inflight:
 
 
 class Engine:
-    """Continuous-batching engine; single data-parallel replica.
+    """Continuous-batching engine; one tensor-parallel replica.
 
-    ``devices`` pins the replica to a mesh slice (one fast-fabric group
-    from ``launch.mesh.replica_slices``): params, cache, and the token
-    slot buffer are committed to the slice's lead device, so every
-    ``paged_step`` — and the host->device transfer of tokens/meta/tables
-    it implies — runs there and nowhere else.  Multiple engines on
+    ``devices`` gives the replica a mesh slice (one fast-fabric group
+    from ``launch.mesh.replica_slices``).  A single-device slice commits
+    params, cache, and the token slot buffer to that device.  A
+    multi-device slice becomes a ("model",)-axis sub-mesh spanning the
+    slice: params shard per family (attention/MLA head projections and
+    mlp hidden over heads, routed experts expert-parallel, ssm/rglru
+    channels — ``sharding.serve_param_pspecs``), the paged pools shard
+    on the same axes (``sharding.serve_cache_pspecs``) while block
+    tables, MLA latent pools, and the slot token buffer replicate, and
+    the unmodified ``paged_step``/``paged_decode_loop`` run under GSPMD
+    — XLA inserts the intra-slice collectives (the paper's fast-fabric
+    layer), and the host-side engine loop, np inputs, and donation are
+    byte-identical to the single-device path.  Multiple engines on
     disjoint slices execute concurrently (``serve.ServeCluster`` drives
-    one worker thread per replica); sharding the model ACROSS a
-    multi-device slice (tensor parallel serving) is a follow-on — today
-    the slice's lead device carries the compute and the rest of the
-    slice is reserved territory.  ``devices=None`` keeps the PR-3
-    behaviour: whatever device JAX defaults to."""
+    one worker thread per replica) with no cross-slice communication.
+    ``devices=None`` keeps the PR-3 behaviour: whatever device JAX
+    defaults to."""
 
     def __init__(self, model, params, cfg: EngineConfig = EngineConfig(),
                  devices: Optional[Sequence] = None,
@@ -276,7 +294,17 @@ class Engine:
         self._dev_tail = 0.0
         self.devices = tuple(devices) if devices else None
         self.device = self.devices[0] if self.devices else None
-        if self.device is not None:
+        self.tp_degree = len(self.devices) if self.devices else 1
+        # a multi-device slice serves tensor-parallel: one ("model",)
+        # sub-mesh spanning the slice, everything partitioned by GSPMD
+        self.mesh = (Mesh(np.asarray(self.devices), ("model",))
+                     if self.tp_degree > 1 else None)
+        self._m.tp_degree.set(self.tp_degree)
+        if self.mesh is not None:
+            abstract = jax.eval_shape(lambda p: p, params)
+            params = jax.device_put(params, sharding.named_sharding_tree(
+                sharding.serve_param_pspecs(abstract, self.mesh), self.mesh))
+        elif self.device is not None:
             # each replica owns a full copy of the params on its slice
             params = jax.device_put(params, self.device)
         self.params = params
@@ -304,7 +332,15 @@ class Engine:
         self.cache = model.init_paged_cache(
             cfg.num_blocks, cfg.block_size, cfg.max_batch,
             cfg.blocks_per_seq, num_state_slots=cfg.num_slots + 1)
-        if self.device is not None:
+        if self.mesh is not None:
+            # pools shard on the family axis (heads/channels); block
+            # tables, latent pools, and token buffers replicate so the
+            # host's np writes address every shard identically
+            self.cache = jax.device_put(
+                self.cache, sharding.named_sharding_tree(
+                    sharding.serve_cache_pspecs(self.cache, self.mesh),
+                    self.mesh))
+        elif self.device is not None:
             # commit the device state to the replica's slice; committed
             # operands pin every jit dispatch (and the np input
             # transfers) to that device
@@ -329,24 +365,36 @@ class Engine:
         skey = tuple(sorted(sample_kw.items()))
         # jit wrappers are shared across Engine instances through the
         # model (same compiled executables; a fresh Engine costs no
-        # recompilation)
+        # recompilation) — but only across SAME-PLACED engines: the key
+        # carries the device/mesh identity, so two engines on different
+        # slices keep separate wrappers and one's warmup compiles never
+        # show up in the other's jit-compile watermark (the mid-serving
+        # `jit_compiles` churn this fixes)
+        pkey = (("mesh",) + tuple(d.id for d in self.devices)
+                if self.mesh is not None
+                else ("dev", self.device.id) if self.device is not None
+                else None)
         self._step_fn = model.jit_cache.setdefault(
-            ("paged_step", donate, skey),
+            ("paged_step", donate, skey, pkey),
             jax.jit(functools.partial(model.paged_step, **sample_kw),
                     donate_argnums=donate))
         self._loop_fn = (model.jit_cache.setdefault(
-            ("paged_decode_loop", donate, skey, cfg.steps_per_dispatch),
+            ("paged_decode_loop", donate, skey, cfg.steps_per_dispatch,
+             pkey),
             jax.jit(functools.partial(model.paged_decode_loop,
                                       num_steps=cfg.steps_per_dispatch,
                                       **sample_kw),
                     donate_argnums=donate))
             if cfg.steps_per_dispatch > 1 else None)
         self._legacy_fn = (model.jit_cache.setdefault(
-            ("paged_step_logits", (1,)),
+            ("paged_step_logits", (1,), pkey),
             jax.jit(model.paged_step_logits, donate_argnums=(1,)))
             if not cfg.fused else None)
         self._slot_buf = jnp.zeros((cfg.num_slots + 1,), jnp.int32)
-        if self.device is not None:
+        if self.mesh is not None:
+            self._slot_buf = jax.device_put(
+                self._slot_buf, NamedSharding(self.mesh, P()))
+        elif self.device is not None:
             self._slot_buf = jax.device_put(self._slot_buf, self.device)
         self._free_slots: List[int] = list(range(cfg.num_slots - 1, -1, -1))
         self._live: List[_Seq] = []     # admission (FCFS) order
@@ -369,22 +417,14 @@ class Engine:
         self._jit_cache_seen: Optional[int] = None
         self._note_compiles()
 
-    # -- stats (deprecated flat view) ---------------------------------------
-
-    @property
-    def stats(self) -> Dict[str, int]:
-        """Deprecated flat counter view (kept so pre-telemetry callers
-        and tests don't break); the registry behind ``self.telemetry``
-        is the real interface — use ``metrics_snapshot()`` for counters
-        plus latency percentiles."""
-        out = {k: int(getattr(self._m, k).value) for k in _STAT_KEYS}
-        out["jit_compiles"] = int(self._m.jit_compiles.value)
-        return out
+    # -- metrics ------------------------------------------------------------
 
     def metrics_snapshot(self) -> Dict[str, object]:
         """This replica's counters + derived-latency percentiles."""
         m = self._m
-        return {"counters": self.stats,
+        counters = {k: int(getattr(m, k).value) for k in _STAT_KEYS}
+        counters["jit_compiles"] = int(m.jit_compiles.value)
+        return {"counters": counters,
                 "latency": {"queue_wait": m.latency.queue_wait.snapshot(),
                             "ttft": m.latency.ttft.snapshot(),
                             "tpot": m.latency.tpot.snapshot(),
@@ -412,6 +452,29 @@ class Engine:
             except Exception:
                 pass
         return total if supported else None
+
+    _COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute")
+
+    def _note_tp_collectives(self) -> None:
+        """Best-effort: AOT-compile the smallest decode shape and count
+        the collective ops XLA's SPMD partitioner placed in it — the
+        per-dispatch fast-fabric communication a TP replica pays.  The
+        extra compile happens at warmup (never mid-serving) and any
+        introspection failure leaves the gauge at 0."""
+        try:
+            rows = self.cfg.decode_buckets[-1]
+            meta = np.zeros((6, rows), np.int32)
+            meta[2:4] = -1
+            txt = self._step_fn.lower(
+                self.params, self.cache, self._slot_buf,
+                np.zeros((rows, 1), np.int32),
+                self.kv.table_array([None] * rows), meta).compile().as_text()
+            self._m.tp_collective_ops.set(sum(
+                len(re.findall(rf"\b{op}\(", txt))
+                for op in self._COLLECTIVE_OPS))
+        except Exception:
+            pass
 
     def _note_compiles(self) -> None:
         cur = self._jit_cache_total(self._jit_fns())
@@ -1080,6 +1143,8 @@ class Engine:
                     self.params, self.cache, self._slot_buf,
                     self.kv.table_array([None] * rows), meta)
                 jax.block_until_ready(out)
+        if self.mesh is not None and self.cfg.fused:
+            self._note_tp_collectives()
         # compile dispatches are not serving work — keep the calls/syncs
         # telemetry about the traffic itself, the dispatch-time
         # histograms free of compile outliers, and re-baseline the

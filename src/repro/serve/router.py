@@ -7,9 +7,11 @@ cheap intra-node interconnect hold one model copy and batch together),
 while the *slow* axis (``pod``) only separates replicas, exactly like it
 only carries the infrequent phase-2 all-reduce in training.  The router
 is the host-side front door: requests go to the replica with the fewest
-outstanding *tokens* (prompt + requested generation — a long-form
-request weighs what it costs, not 1), lowest replica id on ties, so
-heavy traffic spreads without any cross-replica (slow-fabric)
+outstanding *tokens per slice device* (prompt + requested generation —
+a long-form request weighs what it costs, not 1; load and capacity
+normalize by slice width, so a 4-device tensor-parallel replica draws
+proportionally more traffic than a 1-device one), lowest replica id on
+ties, so heavy traffic spreads without any cross-replica (slow-fabric)
 coordination on the hot path.  ``ServeCluster``
 (``repro.serve.dispatcher``) turns this placement into actual execution:
 one Engine per device slice, fed by per-replica worker threads.
@@ -42,7 +44,8 @@ class ReplicaRouter:
     ``replica_id`` indexes both)."""
 
     def __init__(self, topology: Topology, num_pods: int, data_size: int,
-                 capacity_tokens: Optional[int] = None):
+                 capacity_tokens: Optional[int] = None,
+                 widths: Optional[Dict[int, int]] = None):
         groups = topology.phase1_groups(data_size)
         if groups is None:
             groups = [list(range(data_size))]
@@ -53,9 +56,21 @@ class ReplicaRouter:
                     replica_id=len(self.replicas), pod=pod, group=gi,
                     devices=tuple(g)))
         # backpressure threshold: a loaded replica refuses work past this
-        # many outstanding tokens (None = unbounded).  An idle replica
-        # always accepts, so one oversized request can't deadlock.
+        # many outstanding tokens *per device in its slice* (None =
+        # unbounded).  An idle replica always accepts, so one oversized
+        # request can't deadlock.
         self.capacity_tokens = capacity_tokens
+        # slice width per replica: a tensor-parallel replica spanning w
+        # devices serves ~w times the throughput of a 1-device one, so
+        # both the capacity threshold and the load comparison scale by
+        # width — a wide replica draws proportionally more traffic.
+        # Defaults to the topology slice width; ``widths`` overrides for
+        # heterogeneous explicit-slice clusters.
+        self._width: Dict[int, int] = {
+            r.replica_id: max(1, len(r.devices)) for r in self.replicas}
+        if widths:
+            self._width.update({rid: max(1, int(w))
+                                for rid, w in widths.items()})
         self._load: Dict[int, int] = {r.replica_id: 0 for r in self.replicas}
         self._assignment: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, weight)
         self._m: Optional[dict] = None
@@ -82,21 +97,31 @@ class ReplicaRouter:
     def num_replicas(self) -> int:
         return len(self.replicas)
 
+    def width(self, replica_id: int) -> int:
+        """Device-slice width of ``replica_id`` (the TP degree its
+        engine serves at)."""
+        return self._width[replica_id]
+
     def route(self, rid: int, tokens: int = 1) -> Optional[Replica]:
         """Assign request ``rid`` to the replica with the fewest
-        outstanding tokens (lowest id on ties, so placement is
-        deterministic).  ``tokens`` is the request's weight — its
-        outstanding prompt+decode tokens.  Returns None when every
-        replica is saturated (``capacity_tokens``): backpressure, the
+        outstanding tokens *per slice device* (lowest id on ties, so
+        placement is deterministic) — a width-4 TP replica with 40
+        outstanding tokens is as loaded as a width-1 replica with 10.
+        ``tokens`` is the request's weight — its outstanding
+        prompt+decode tokens.  Returns None when every replica is
+        saturated (``capacity_tokens`` × width): backpressure, the
         caller should wait for a release and retry.  Re-routing an
         already-assigned rid returns its existing placement."""
         if rid in self._assignment:
             return self.replicas[self._assignment[rid][0]]
         best = min(self.replicas,
-                   key=lambda r: (self._load[r.replica_id], r.replica_id))
+                   key=lambda r: (self._load[r.replica_id]
+                                  / self._width[r.replica_id],
+                                  r.replica_id))
         load = self._load[best.replica_id]
         if (self.capacity_tokens is not None and load > 0
-                and load + tokens > self.capacity_tokens):
+                and load + tokens >
+                self.capacity_tokens * self._width[best.replica_id]):
             if self._m is not None:
                 self._m["refusals"].inc()
             return None

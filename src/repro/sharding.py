@@ -265,3 +265,72 @@ def named_sharding_tree(spec_tree: Any, mesh: Mesh) -> Any:
     spec_tree = filter_spec_for_mesh(spec_tree, mesh)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Serving (tensor-parallel replica) shardings
+# ---------------------------------------------------------------------------
+# A serve replica's sub-mesh has a single "model" axis spanning its device
+# slice (launch.mesh.replica_slices).  Params reuse the training rules with
+# one remap: routed experts go *expert-parallel* over "model" (the serving
+# mesh has no "data" axis, and splitting d_ff_expert would change psum
+# reduction order inside each expert — EP keeps per-expert math bit-exact,
+# which the engine==sequential equivalence contract requires).  The paged
+# pools shard on the same family axis the params do (heads / channels),
+# while everything consulted by control flow — block tables, slot token
+# buffers, MLA latent pools (shared across heads by construction) — stays
+# replicated, so `paged_step`/`paged_decode_loop` run unchanged under
+# GSPMD and every collective is XLA's to place.
+
+
+def serve_param_pspecs(abstract_params: Any, mesh: Mesh) -> Any:
+    """Partition specs for a TP serve replica: training rules with routed
+    experts remapped from ("data", …, "model") to pure expert-parallel
+    over "model", then legalized against ``mesh`` (non-dividing dims stay
+    replicated)."""
+    base = param_pspecs(abstract_params)
+
+    def remap(path, leaf, spec):
+        if re.search(r"moe/experts/", _path_str(path)):
+            return P(*["model" if s == "data" else None for s in spec])
+        return spec
+
+    specs = jax.tree_util.tree_map_with_path(remap, abstract_params, base)
+    specs = legalize_pspecs(abstract_params, specs, mesh)
+    return filter_spec_for_mesh(specs, mesh)
+
+
+# paged-cache leaf name -> spec for the *unstacked* serving layout.  Keyed
+# by basename because init_paged_cache emits one dict per layer family:
+#   k/v      (L, num_blocks, block_size, num_kv_heads, head_dim)  heads
+#   ckv      (L, num_blocks, block_size, kv_lora_rank)   latent: replicated
+#   krope    (L, num_blocks, block_size, qk_rope_head_dim)        replicated
+#   state    (L, slots, heads, head_dim, d_state)                 heads
+#   conv     (..., channels)                                      channels
+#   h        (..., channels)                                      channels
+_CACHE_AXES = {"k": 3, "v": 3, "state": 2}        # name -> sharded dim
+_CACHE_LAST = {"conv", "h"}                       # shard the last dim
+
+
+def serve_cache_pspecs(cache: Any, mesh: Mesh) -> Any:
+    """Partition specs for a paged cache pytree on a serve replica mesh:
+    K/V pools shard on the head axis, ssm/rglru state on the channel/head
+    axes, MLA latent pools + block tables + token buffers replicate."""
+    def f(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = np.ndim(leaf)
+        if name in _CACHE_AXES and nd > _CACHE_AXES[name]:
+            # no trailing Nones: XLA hands donated outputs back with the
+            # trimmed canonical spec, and spec-identical round-trips are
+            # what keep the jit cache at one entry per shape
+            return P(*([None] * _CACHE_AXES[name] + ["model"]))
+        if name in _CACHE_LAST and nd >= 1:
+            return P(*([None] * (nd - 1) + ["model"]))
+        return P()
+
+    specs = jax.tree_util.tree_map_with_path(f, cache)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), getattr(x, "dtype", None)),
+        cache)
+    specs = legalize_pspecs(abstract, specs, mesh)
+    return filter_spec_for_mesh(specs, mesh)

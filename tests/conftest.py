@@ -42,3 +42,20 @@ def tree_max_diff(a, b):
 @pytest.fixture
 def rng():
     return jax.random.key(0)
+
+
+@pytest.fixture(autouse=True)
+def _release_jit_executables_between_tests():
+    """Drop jax's compiled-executable caches after each test.
+
+    The full suite compiles thousands of executables into one process;
+    on XLA CPU the accumulated JIT code eventually segfaults the
+    compiler itself (deterministically, ~150 tests in — sooner with 8
+    virtual devices — independent of free RAM or stack rlimit;
+    clearing the caches is confirmed to prevent it).  Nothing in the
+    suite relies on compiled state crossing test boundaries —
+    `Model.jit_cache` sharing and the engine jit_compiles watermarks
+    both live within a single test — so releasing executables between
+    tests only costs recompiles."""
+    yield
+    jax.clear_caches()

@@ -455,7 +455,7 @@ def test_engine_matches_sequential_greedy(lm):
                                max_new_tokens=r.max_new_tokens)
                        for r in reqs])
     assert len(results) == len(reqs)
-    assert eng.stats["decode_active_slot_steps"] > 0
+    assert eng.metrics_snapshot()["counters"]["decode_active_slot_steps"] > 0
     for req, rid in zip(reqs, sorted(results)):
         ref = _sequential_greedy(model, params, req.prompt,
                                  req.max_new_tokens)
@@ -474,7 +474,7 @@ def test_engine_preemption_keeps_greedy_equivalence(lm):
     results = eng.run([Request(prompt=r.prompt.copy(),
                                max_new_tokens=r.max_new_tokens)
                        for r in reqs])
-    assert eng.stats["preemptions"] > 0          # starvation was exercised
+    assert eng.metrics_snapshot()["counters"]["preemptions"] > 0
     for req, rid in zip(reqs, sorted(results)):
         ref = _sequential_greedy(model, params, req.prompt,
                                  req.max_new_tokens)
@@ -582,7 +582,7 @@ def test_fused_unfused_and_pipeline_modes_token_identical(lm):
                                max_new_tokens=g) for p, g in protos])
         outs[name] = [res[r].tokens for r in sorted(res)]
         if name == "fused":
-            assert eng.stats["preemptions"] > 0
+            assert eng.metrics_snapshot()["counters"]["preemptions"] > 0
     assert outs["fused"] == outs["unfused"]
     assert outs["fused"] == outs["fused_sync"]
 
@@ -615,7 +615,7 @@ def test_preempted_victim_keeps_no_blocks(lm):
         assert held <= live, f"dead rids holding blocks: {held - live}"
         if not eng.has_work:
             break
-    assert eng.stats["preemptions"] > 0
+    assert eng.metrics_snapshot()["counters"]["preemptions"] > 0
     for req, rid in zip(reqs, sorted(results)):
         ref = _sequential_greedy(model, params, req.prompt,
                                  req.max_new_tokens)
@@ -647,7 +647,7 @@ def test_engine_sliding_window_footprint_stays_o_window(lm):
             results[r.rid] = r
         peak = max(peak, 8 - eng.kv.allocator.num_free)
     assert peak <= 6                             # ceil(16/4) + frontier + 1
-    assert eng.stats["preemptions"] == 0
+    assert eng.metrics_snapshot()["counters"]["preemptions"] == 0
     (res,) = results.values()
     ref = _sequential_greedy(wmodel, params, prompt, 110)
     assert res.tokens == ref
@@ -684,7 +684,8 @@ def test_cluster_matches_sequential_greedy_per_replica(lm):
     results = cluster.run(subs)
     assert len(results) == len(subs)
     assert all(v == 0 for v in cluster.loads().values())
-    assert all(e.stats["generated_tokens"] > 0 for e in cluster.engines)
+    assert all(e.metrics_snapshot()["counters"]["generated_tokens"] > 0
+               for e in cluster.engines)
     for (p, g), sub in zip(protos, subs):
         ref = _sequential_greedy(model, params, np.asarray(p), g)
         assert results[sub.rid].tokens == ref
@@ -854,7 +855,7 @@ def test_family_preemption_keeps_greedy_equivalence(family_lm):
     results = eng.run([Request(prompt=r.prompt.copy(),
                                max_new_tokens=r.max_new_tokens)
                        for r in reqs])
-    assert eng.stats["preemptions"] > 0          # starvation was exercised
+    assert eng.metrics_snapshot()["counters"]["preemptions"] > 0
     for req, rid in zip(reqs, sorted(results)):
         ref = _sequential_greedy(model, params, req.prompt,
                                  req.max_new_tokens)
@@ -887,7 +888,7 @@ def test_forced_preemption_roundtrip_fixed_state(family_lm):
         if step % 3 == 0 and eng._preempt_one(exclude_rid=-1):
             forced += 1
     assert forced > 0
-    assert eng.stats["preemptions"] >= forced
+    assert eng.metrics_snapshot()["counters"]["preemptions"] >= forced
     assert any(r.preempted > 0 for r in results.values())
     for req, rid in zip(reqs, sorted(results)):
         ref = _sequential_greedy(model, params, req.prompt,

@@ -73,7 +73,8 @@ def _run_engine(model, params, reqs, *, spd, temperature=0.0):
     res = eng.run([Request(prompt=r.prompt.copy(),
                            max_new_tokens=r.max_new_tokens, rid=r.rid)
                    for r in reqs])
-    return [res[r.rid].tokens for r in reqs], eng.stats
+    return ([res[r.rid].tokens for r in reqs],
+            eng.metrics_snapshot()["counters"])
 
 
 def test_decode_loop_depth_equivalence_greedy(any_lm):
@@ -136,8 +137,9 @@ def test_decode_loop_forced_mid_loop_pool_starvation_early_exit():
     res = eng.run([Request(prompt=r.prompt.copy(),
                            max_new_tokens=r.max_new_tokens, rid=r.rid)
                    for r in reqs])
-    assert eng.stats["loop_truncations"] > 0     # partial grants happened
-    assert eng.stats["preemptions"] > 0          # and full starvation too
+    c = eng.metrics_snapshot()["counters"]
+    assert c["loop_truncations"] > 0             # partial grants happened
+    assert c["preemptions"] > 0                  # and full starvation too
     for r in reqs:
         ref = _sequential_greedy(model, params, r.prompt, r.max_new_tokens)
         assert res[r.rid].tokens == ref
@@ -220,8 +222,9 @@ def test_sliding_window_reclamation_at_loop_boundaries():
         peak = max(peak, 10 - eng.kv.allocator.num_free)
     # window blocks (4) + frontier/straddle + 8-step headroom (2)
     assert peak <= 8
-    assert eng.stats["preemptions"] == 0
-    assert eng.stats["loop_dispatches"] > 0
+    c = eng.metrics_snapshot()["counters"]
+    assert c["preemptions"] == 0
+    assert c["loop_dispatches"] > 0
     (res,) = results.values()
     assert res.tokens == _sequential_greedy(model, params, prompt, 110)
 
@@ -242,7 +245,7 @@ def test_slot_state_loop_truncates_without_device_tables():
     res = eng.run([Request(prompt=r.prompt.copy(),
                            max_new_tokens=r.max_new_tokens, rid=r.rid)
                    for r in reqs])
-    assert eng.stats["loop_dispatches"] > 0
+    assert eng.metrics_snapshot()["counters"]["loop_dispatches"] > 0
     for r in reqs:
         ref = _sequential_greedy(model, params, r.prompt, r.max_new_tokens)
         assert res[r.rid].tokens == ref

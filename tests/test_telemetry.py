@@ -170,19 +170,18 @@ def test_engine_run_trace_invariants(tiny_lm, spd):
     assert snap["latency"]["ttft"]["count"] == len(reqs)
     # histograms observe at most once per request
     assert snap["latency"]["tpot"]["count"] <= len(reqs)
-    # the flat stats view and the registry snapshot are the same numbers
-    assert snap["counters"] == eng.stats
 
 
-def test_engine_stats_dict_back_compat(tiny_lm):
-    """eng.stats keeps the old flat-dict contract: plain ints, the
-    legacy key set, values that accumulate across a run."""
+def test_engine_counters_snapshot_contract(tiny_lm):
+    """metrics_snapshot()["counters"] is the flat counter surface:
+    plain ints, the full engine key set, values that accumulate across
+    a run."""
     cfg, model, params = tiny_lm
     eng = Engine(model, params, _ecfg())
     eng.run([Request(prompt=r.prompt.copy(),
                      max_new_tokens=r.max_new_tokens, rid=r.rid)
              for r in _requests(cfg, 2, 42000)])
-    s = eng.stats
+    s = eng.metrics_snapshot()["counters"]
     for k in ("steps", "decode_steps", "prefill_tokens",
               "generated_tokens", "preemptions", "model_calls",
               "host_syncs", "loop_dispatches", "loop_truncations",
@@ -224,10 +223,10 @@ def test_preemption_counted_and_single_terminal(tiny_lm):
     eng.run([Request(prompt=r.prompt.copy(),
                      max_new_tokens=r.max_new_tokens, rid=r.rid)
              for r in reqs])
-    assert eng.stats["preemptions"] > 0
+    preempts = eng.metrics_snapshot()["counters"]["preemptions"]
+    assert preempts > 0
     _check_lifecycle(tel, [r.rid for r in reqs])
-    assert sum(t.preemptions for t in tel.requests.traces()) \
-        == eng.stats["preemptions"]
+    assert sum(t.preemptions for t in tel.requests.traces()) == preempts
 
 
 # ---------------------------------------------------------------------------
@@ -253,9 +252,10 @@ def test_zero_new_compiles_in_steady_state(tiny_lm, spd):
     eng.run([Request(prompt=r.prompt.copy(),
                      max_new_tokens=r.max_new_tokens, rid=r.rid,
                      arrival_time=r.arrival_time) for r in reqs])
-    assert eng.stats["prefill_tokens"] > 0
-    assert eng.stats["decode_steps"] > 0
-    assert eng.stats["jit_compiles"] == 0, \
+    c = eng.metrics_snapshot()["counters"]
+    assert c["prefill_tokens"] > 0
+    assert c["decode_steps"] > 0
+    assert c["jit_compiles"] == 0, \
         "steady-state serving recompiled after warmup"
 
 
@@ -325,11 +325,11 @@ def test_tracing_off_is_free(tiny_lm):
 
 
 # ---------------------------------------------------------------------------
-# cluster metrics: aggregate + per-replica, stats back-compat, cancel
+# cluster metrics: aggregate + per-replica, cancel
 # ---------------------------------------------------------------------------
 
 
-def test_cluster_metrics_per_replica_and_flat_backcompat(tiny_lm, tmp_path):
+def test_cluster_metrics_per_replica_aggregation(tiny_lm, tmp_path):
     cfg, model, params = tiny_lm
     cl = ServeCluster.for_replicas(model, params, _ecfg(),
                                    num_replicas=2, trace=True)
@@ -340,11 +340,9 @@ def test_cluster_metrics_per_replica_and_flat_backcompat(tiny_lm, tmp_path):
     assert len(res) == len(reqs)
     m = cl.metrics()
     assert sorted(m["per_replica"]) == [0, 1]
-    # aggregate counters are exactly the per-replica sums, and the
-    # deprecated flat stats view agrees with them
+    # aggregate counters are exactly the per-replica sums
     for k, v in m["aggregate"]["counters"].items():
         assert v == sum(m["per_replica"][i]["counters"][k] for i in (0, 1))
-    assert cl.stats == m["aggregate"]["counters"]
     # aggregate latency percentiles cover every request, per replica
     # counts split them
     agg = m["aggregate"]["latency"]
