@@ -5,14 +5,19 @@ dispatch (this container is CPU-only; on TPU set interpret=False via
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_view as _dv
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
 from repro.kernels import fused_update as _fu
+from repro.kernels import mla_decode as _mla
+from repro.kernels import sampling as _sp
+from repro.kernels import slot_state as _ss
 
 _INTERPRET = True          # flipped to False on real TPU
 
@@ -146,20 +151,159 @@ def flash_decode_paged(q, k_pool, v_pool, block_tables, pos, *,
     return o[..., :hd]
 
 
+def decode_view_attend(q, k_view, v_view, pos, *, window: int = 0,
+                       block_kv: int = 128) -> jax.Array:
+    """Decode attention over the N-step loop's per-row contiguous views:
+    q (B,H,hd); k_view,v_view (B,S,KV,hd) with slot j = logical position
+    j (the trailing trash slot and unwritten frontier slots are masked
+    in-kernel by ``kpos <= pos``); pos (B,) -> (B,H,hd).
+
+    Replaces the jnp gather+softmax of attention.paged_decode_attention
+    inside the fori_loop.  Pads hd to 128 lanes and S to the kv-block
+    multiple; ``scale`` is passed into the kernel from the TRUE head
+    dim, so padding never perturbs the softmax.  Padded kv slots carry
+    kpos >= S and every live row's pos is < S, so they mask out."""
+    b, h, hd = q.shape
+    s = k_view.shape[1]
+    hd_pad = (-hd) % 128
+    bk = min(block_kv, -(-s // 128) * 128)
+    s_pad = (-s) % bk
+    qp = _pad_heads(q, hd_pad)
+    kp = _pad_heads(k_view, hd_pad)
+    vp = _pad_heads(v_view, hd_pad)
+    if s_pad:
+        kp = jnp.pad(kp, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        vp = jnp.pad(vp, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    o = _dv.decode_view_attend_bhd(qp, kp, vp, pos,
+                                   scale=1.0 / (hd ** 0.5), window=window,
+                                   block_kv=bk, interpret=_INTERPRET)
+    return o[..., :hd]
+
+
+# ---------------------------------------------------------------------------
+# MLA absorbed-query latent attends (views + paged pools)
+# ---------------------------------------------------------------------------
+
+
+def _pad_lanes(x, pad):
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def mla_decode_views(q_lat, q_rope, ckv, kr, pos, *, scale,
+                     block: int = 128) -> jax.Array:
+    """Pallas form of ref.mla_decode_views: q_lat (B,C,H,r), q_rope
+    (B,C,H,rd); ckv (B,S,r), kr (B,S,rd) per-row contiguous latent
+    views; pos (B,) -> o_lat (B,C,H,r).  Pads r/rd to 128 lanes and S
+    to the block multiple — zero pads are inert because ``scale`` is
+    explicit and padded kpos always exceeds live positions."""
+    r, rd = q_lat.shape[-1], q_rope.shape[-1]
+    s = ckv.shape[1]
+    r_pad, rd_pad = (-r) % 128, (-rd) % 128
+    bk = min(block, -(-s // 128) * 128)
+    s_pad = (-s) % bk
+    qlp, ckvp = _pad_lanes(q_lat, r_pad), _pad_lanes(ckv, r_pad)
+    qrp, krp = _pad_lanes(q_rope, rd_pad), _pad_lanes(kr, rd_pad)
+    if s_pad:
+        ckvp = jnp.pad(ckvp, ((0, 0), (0, s_pad), (0, 0)))
+        krp = jnp.pad(krp, ((0, 0), (0, s_pad), (0, 0)))
+    o = _mla.mla_views_attend(qlp, qrp, ckvp, krp, pos, scale=scale,
+                              block=bk, interpret=_INTERPRET)
+    return o[..., :r]
+
+
+def mla_decode_paged(q_lat, q_rope, ckv_pool, kr_pool, block_tables, pos,
+                     *, scale) -> jax.Array:
+    """Pallas form of ref.mla_decode_paged: the block table rides in
+    scalar prefetch and routes each latent block's DMA — no gathered
+    (B, S, r) intermediate at all.  Pools (nb,bs,r)/(nb,bs,rd);
+    q_lat (B,C,H,r); block_tables (B,NB); pos (B,) -> (B,C,H,r).
+
+    When r/rd aren't 128-aligned the whole pools are zero-padded per
+    call (same O(pool) caveat as flash_decode_paged — size production
+    pools lane-aligned)."""
+    r, rd = q_lat.shape[-1], q_rope.shape[-1]
+    r_pad, rd_pad = (-r) % 128, (-rd) % 128
+    o = _mla.mla_paged_attend(
+        _pad_lanes(q_lat, r_pad), _pad_lanes(q_rope, rd_pad),
+        _pad_lanes(ckv_pool, r_pad), _pad_lanes(kr_pool, rd_pad),
+        block_tables, pos, scale=scale, interpret=_INTERPRET)
+    return o[..., :r]
+
+
+# ---------------------------------------------------------------------------
+# slot-state gather/scatter (ssm/rglru recurrent pools)
+# ---------------------------------------------------------------------------
+
+
+def slot_gather(pool, slots, fresh=None) -> jax.Array:
+    """Gather per-sequence recurrent state rows: pool (S, *F);
+    slots (B,); fresh (B,) bool — True rows (first token, no state yet)
+    emit zeros.  Returns (B, *F) in pool dtype.  One routed DMA per
+    row via scalar-prefetched slot indices; feature dims are flattened
+    and lane-padded."""
+    s = pool.shape[0]
+    feat = pool.shape[1:]
+    f = math.prod(feat) if feat else 1
+    f_pad = (-f) % 128
+    p2 = _pad_lanes(pool.reshape(s, f), f_pad)
+    b = slots.shape[0]
+    fr = (jnp.zeros((b,), jnp.int32) if fresh is None
+          else jnp.asarray(fresh).astype(jnp.int32))
+    out = _ss.slot_gather_rows(p2, jnp.asarray(slots, jnp.int32), fr,
+                               interpret=_INTERPRET)
+    return out[:, :f].reshape((b,) + feat)
+
+
+def slot_scatter(pool, state_slots, valid_len, value) -> jax.Array:
+    """Scatter per-sequence recurrent state back into the pool — the
+    Pallas form of layers.slot_state_scatter (rows with valid_len == 0
+    route to trash slot 0; valid_len=None writes unconditionally).
+    pool (S, *F); state_slots (B,); value (B, *F).  Returns the updated
+    pool.  The kernel walks pool rows against a host-built inverse map,
+    so no in-place aliasing is needed."""
+    s = pool.shape[0]
+    feat = pool.shape[1:]
+    f = math.prod(feat) if feat else 1
+    f_pad = (-f) % 128
+    slots = jnp.asarray(state_slots, jnp.int32)
+    if valid_len is not None:
+        slots = jnp.where(jnp.asarray(valid_len) > 0, slots, 0)
+    b = slots.shape[0]
+    p2 = _pad_lanes(pool.reshape(s, f), f_pad)
+    v2 = _pad_lanes(value.astype(pool.dtype).reshape(b, f), f_pad)
+    out = _ss.slot_scatter_rows(p2, slots, v2, interpret=_INTERPRET)
+    return out[:, :f].reshape(pool.shape)
+
+
 # ---------------------------------------------------------------------------
 # device-side serving sampler (greedy / temperature / top-k)
 # ---------------------------------------------------------------------------
 
 
-def sample_tokens(logits, keys, *, temperature: float, top_k: int = 0):
+def sample_tokens(logits, keys, *, temperature: float, top_k: int = 0,
+                  impl: str = "jnp"):
     """Per-row token sampling on device for the serving engine's fused
     step and N-step decode loop: greedy argmax at temperature <= 0,
     else top-k-restricted temperature categorical keyed per row
     (``ref.sample_keys``: fold_in(request, position) — stateless, so the
-    draw is identical at every dispatch depth).  jnp implementation
-    today — sampling is bandwidth-trivial next to the model call; a
-    fused top-k+gumbel Pallas kernel is a follow-on."""
+    draw is identical at every dispatch depth).
+
+    impl="pallas" runs the fused streaming kernels (sampling.py):
+    token-identical to the jnp oracle, including argmax ties and the
+    gumbel draw (categorical IS gumbel-max; the noise comes from the
+    same per-row keys, generated outside the kernel and streamed in).
+    """
     from repro.kernels import ref as _ref
+    if impl == "pallas":
+        if temperature <= 0.0:
+            return _sp.greedy_sample(logits, interpret=_INTERPRET)
+        v = logits.shape[-1]
+        lg = logits.astype(jnp.float32)
+        g = jax.vmap(lambda k: jax.random.gumbel(k, (v,), jnp.float32))(keys)
+        return _sp.gumbel_sample(lg, g, temperature=temperature,
+                                 top_k=top_k, interpret=_INTERPRET)
     return _ref.sample_tokens(logits, keys, temperature=temperature,
                               top_k=top_k)
 

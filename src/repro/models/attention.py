@@ -337,8 +337,17 @@ def apply_attention(params, x, cfg, *, positions=None, causal=True,
                          jnp.minimum(pos, sview - 1), sview)
         kc = kc.at[rows, wpos].set(k[:, 0].astype(kc.dtype))
         vc = vc.at[rows, wpos].set(v[:, 0].astype(vc.dtype))
-        o = paged_decode_attention(_group(q, kv), kc, vc, positions,
-                                   window=window)
+        if cfg.attn_impl == "pallas":
+            # view-resident decode attend: the kernel indexes the
+            # contiguous view directly inside the fori_loop (per-row
+            # positions via scalar prefetch) — no jnp gather/softmax
+            # materialization per iteration
+            from repro.kernels import ops as kops
+            o = kops.decode_view_attend(q[:, 0], kc, vc, pos,
+                                        window=window)[:, None]
+        else:
+            o = paged_decode_attention(_group(q, kv), kc, vc, positions,
+                                       window=window)
         y = o.reshape(b, 1, h * cfg.head_dim)
         y = jnp.einsum("bsk,kd->bsd", y, params["wo"].astype(dt))
         return y, {"kview": kc, "vview": vc}

@@ -136,8 +136,13 @@ def apply_mla(params, x, cfg, *, positions=None, cache=None, pos=None,
         ckv_c = ckv_c.at[rows, wpos].set(c[:, 0].astype(ckv_c.dtype))
         kr_c = kr_c.at[rows, wpos].set(k_rope[:, 0].astype(kr_c.dtype))
         q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)
-        o_lat = mla_decode_views(q_lat, q_rope, ckv_c, kr_c, pos,
-                                 scale=scale)
+        if cfg.attn_impl == "pallas":
+            from repro.kernels import ops as kops
+            o_lat = kops.mla_decode_views(q_lat, q_rope, ckv_c, kr_c, pos,
+                                          scale=scale)
+        else:
+            o_lat = mla_decode_views(q_lat, q_rope, ckv_c, kr_c, pos,
+                                     scale=scale)
         o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(dt), wv)
         o = o.reshape(b, 1, h * a.v_head_dim)
         y = jnp.einsum("bsk,kd->bsd", o, params["wo"].astype(dt))
@@ -165,8 +170,13 @@ def apply_mla(params, x, cfg, *, positions=None, cache=None, pos=None,
         kr_pool = kr_pool.at[blk, slot].set(k_rope.astype(kr_pool.dtype))
         # absorb q_nope through W^{UK}; attend the latent pool directly
         q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)
-        o_lat = mla_decode_paged(q_lat, q_rope, ckv_pool, kr_pool, bt,
-                                 pos, scale=scale)
+        if cfg.attn_impl == "pallas":
+            from repro.kernels import ops as kops
+            o_lat = kops.mla_decode_paged(q_lat, q_rope, ckv_pool,
+                                          kr_pool, bt, pos, scale=scale)
+        else:
+            o_lat = mla_decode_paged(q_lat, q_rope, ckv_pool, kr_pool, bt,
+                                     pos, scale=scale)
         o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(dt), wv)
         o = o.reshape(b, c_tok, h * a.v_head_dim)
         y = jnp.einsum("bsk,kd->bsd", o, params["wo"].astype(dt))

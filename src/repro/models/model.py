@@ -78,11 +78,20 @@ class PagedSpec:
                    split).  Engines consult this for telemetry; the
                    actual specs live in ``sharding.serve_param_pspecs``
                    / ``serve_cache_pspecs``.
+      kernel_spec  which ``repro.kernels.ops`` entry serves each layer
+                   kind's decode hot path when
+                   ``cfg.attn_impl == "pallas"`` (the jnp oracle
+                   otherwise): (kind, "view_op/paged_op") pairs, e.g.
+                   ("attn", "decode_view_attend/flash_decode_paged").
+                   Every named op is a real ops.py function — the
+                   kernel-coverage test and kernels_bench key on this
+                   record staying truthful.
     """
     has_blocks: bool
     has_state: bool
     reclaim_window: int = 0
     tp_spec: Tuple[Tuple[str, str], ...] = ()
+    kernel_spec: Tuple[Tuple[str, str], ...] = ()
 
     @property
     def width1_mixed(self) -> bool:
@@ -183,12 +192,21 @@ def build_model(cfg: ModelConfig) -> Model:
         elif cfg.family != "ssm":   # mamba blocks have no separate mlp
             tp["mlp"] = "hidden"
     tp["embed"] = tp["lm_head"] = "vocab"
+    kspec: Dict[str, str] = {}
+    for k in kinds:
+        if k in ("attn", "local_attn"):
+            kspec[k] = ("mla_decode_views/mla_decode_paged" if cfg.mla
+                        else "decode_view_attend/flash_decode_paged")
+        elif k in ("ssm", "rglru"):
+            kspec[k] = "slot_gather/slot_scatter"
+    kspec["sampling"] = "sample_tokens"
     spec = PagedSpec(
         has_blocks=bool(windows),
         has_state=any(k in ("ssm", "rglru") for k in kinds),
         reclaim_window=(max(windows)
                         if windows and all(w > 0 for w in windows) else 0),
-        tp_spec=tuple(sorted(tp.items())))
+        tp_spec=tuple(sorted(tp.items())),
+        kernel_spec=tuple(sorted(kspec.items())))
     return Model(
         cfg=cfg,
         init=functools.partial(transformer.init_params, cfg=cfg),

@@ -85,10 +85,19 @@ def apply_rglru(params, x, cfg, *, cache=None, make_cache=False, pos=None,
         conv_cache = conv0
     elif paged:
         fresh = (pos == 0)
-        conv0 = jnp.where(fresh[:, None, None], 0,
-                          cache["conv"][state_slots]).astype(dt)
-        h0 = jnp.where(fresh[:, None], 0,
-                       cache["h"][state_slots]).astype(jnp.float32)
+        if cfg.attn_impl == "pallas":
+            # fused slot gather (see ssm.py): one routed DMA per row,
+            # fresh rows zeroed in-kernel
+            from repro.kernels import ops as kops
+            conv0 = kops.slot_gather(cache["conv"], state_slots,
+                                     fresh).astype(dt)
+            h0 = kops.slot_gather(cache["h"], state_slots,
+                                  fresh).astype(jnp.float32)
+        else:
+            conv0 = jnp.where(fresh[:, None, None], 0,
+                              cache["conv"][state_slots]).astype(dt)
+            h0 = jnp.where(fresh[:, None], 0,
+                           cache["h"][state_slots]).astype(jnp.float32)
         conv_cache = conv0
     else:
         conv_cache = cache["conv"] if cache is not None else None
@@ -132,6 +141,13 @@ def apply_rglru(params, x, cfg, *, cache=None, make_cache=False, pos=None,
             "h_view": h_last.astype(cache["h_view"].dtype)}
     if paged:
         new_conv = slot_conv_window(conv0, xr_raw, valid_len)
+        if cfg.attn_impl == "pallas":
+            from repro.kernels import ops as kops
+            return out, {
+                "conv": kops.slot_scatter(cache["conv"], state_slots,
+                                          valid_len, new_conv),
+                "h": kops.slot_scatter(cache["h"], state_slots, valid_len,
+                                       h_last)}
         return out, {
             "conv": slot_state_scatter(cache["conv"], state_slots,
                                        valid_len, new_conv),

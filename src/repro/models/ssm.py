@@ -245,10 +245,18 @@ def apply_ssm(params, x, cfg, *, cache=None, make_cache=False, pos=None,
         conv_cache = conv0
     elif paged:
         fresh = (pos == 0)
-        conv0 = jnp.where(fresh[:, None, None], 0,
-                          cache["conv"][state_slots]).astype(dt_)
-        state0 = jnp.where(fresh[:, None, None, None], 0,
-                           cache["state"][state_slots])
+        if cfg.attn_impl == "pallas":
+            # fused slot gather: scalar-prefetched slot indices route
+            # one DMA per row; fresh rows emit zeros in-kernel
+            from repro.kernels import ops as kops
+            conv0 = kops.slot_gather(cache["conv"], state_slots,
+                                     fresh).astype(dt_)
+            state0 = kops.slot_gather(cache["state"], state_slots, fresh)
+        else:
+            conv0 = jnp.where(fresh[:, None, None], 0,
+                              cache["conv"][state_slots]).astype(dt_)
+            state0 = jnp.where(fresh[:, None, None, None], 0,
+                               cache["state"][state_slots])
         conv_cache = conv0
     else:
         conv_cache = cache["conv"] if cache is not None else None
@@ -294,6 +302,13 @@ def apply_ssm(params, x, cfg, *, cache=None, make_cache=False, pos=None,
             "state_view": final_state.astype(cache["state_view"].dtype)}
     if paged:
         new_conv = slot_conv_window(conv0, xBC_raw, valid_len)
+        if cfg.attn_impl == "pallas":
+            from repro.kernels import ops as kops
+            return out, {
+                "conv": kops.slot_scatter(cache["conv"], state_slots,
+                                          valid_len, new_conv),
+                "state": kops.slot_scatter(cache["state"], state_slots,
+                                           valid_len, final_state)}
         return out, {
             "conv": slot_state_scatter(cache["conv"], state_slots,
                                        valid_len, new_conv),

@@ -477,24 +477,29 @@ def paged_step(params, cache, slot_buf, tokens, block_tables, meta, cfg,
     hf = jnp.take_along_axis(h, idx[:, None, None], axis=1)    # (B,1,D)
     logits = _logits(params, hf, cfg)[:, 0].astype(jnp.float32)
     toks = _sample_rows(logits, rid, pos + valid_len,
-                        temperature=temperature, top_k=top_k, seed=seed)
+                        temperature=temperature, top_k=top_k, seed=seed,
+                        impl=cfg.attn_impl)
     spare = slot_buf.shape[0] - 1
     dst = jnp.where(dst_slot >= 0, dst_slot, spare)
     slot_buf = slot_buf.at[dst].set(toks)
     return toks, slot_buf, _canonical_block_tables(new_cache)
 
 
-def _sample_rows(logits, rids, positions, *, temperature, top_k, seed):
+def _sample_rows(logits, rids, positions, *, temperature, top_k, seed,
+                 impl="jnp"):
     """Sample one token per row on device.  The sampled token's key is a
     pure function of (seed, rid, absolute position), so the draw is
     identical whether it happens in a depth-1 fused step, inside the
-    N-step decode loop, or while recomputing a preempted request."""
+    N-step decode loop, or while recomputing a preempted request.
+    ``impl`` follows cfg.attn_impl — "pallas" runs the fused streaming
+    sampler (token-identical to the jnp oracle)."""
     from repro.kernels import ops as kops
     from repro.kernels.ref import sample_keys
     keys = (sample_keys(seed, rids, positions)
             if temperature > 0.0 else None)
     return kops.sample_tokens(logits, keys, temperature=temperature,
-                              top_k=top_k)
+                              top_k=top_k,
+                              impl="pallas" if impl == "pallas" else "jnp")
 
 
 def _paged_block_size(cache):
@@ -531,13 +536,17 @@ def _scatter_view(pool, bt, view):
     return pool.at[:, bt].set(body)
 
 
-def _loop_views(cache, block_tables, state_slot, pos0):
+def _loop_views(cache, block_tables, state_slot, pos0, cfg=None):
     """Rearrange the paged cache into the decode loop's per-row resident
     form: block pools gather into contiguous views (the pool gather and
     the table indirection are paid once per dispatch instead of once per
     token), slot-state pools gather each row's O(1) state.  ``pos0 == 0``
     rows read zero state (fresh/recomputed rows — decode rows never are,
-    but the gather keeps the paged-path semantics)."""
+    but the gather keeps the paged-path semantics).  With
+    cfg.attn_impl == "pallas" the slot-state gather runs the fused
+    kernel (vmapped over layers); block-pool views stay a jnp gather —
+    they feed the Pallas attends and are already once-per-dispatch."""
+    use_pallas = cfg is not None and cfg.attn_impl == "pallas"
     fresh = pos0 == 0
     views = {}
     for run, rc in cache.items():
@@ -553,19 +562,27 @@ def _loop_views(cache, block_tables, state_slot, pos0):
         else:
             vc = {}
             for name, leaf in rc.items():
-                g = leaf[:, state_slot]        # (L, B, ...)
-                mask = fresh.reshape((1, -1) + (1,) * (g.ndim - 2))
-                vc[f"{name}_view"] = jnp.where(mask, 0, g)
+                if use_pallas:
+                    from repro.kernels import ops as kops
+                    vc[f"{name}_view"] = jax.vmap(
+                        lambda p: kops.slot_gather(p, state_slot, fresh)
+                    )(leaf)
+                else:
+                    g = leaf[:, state_slot]        # (L, B, ...)
+                    mask = fresh.reshape((1, -1) + (1,) * (g.ndim - 2))
+                    vc[f"{name}_view"] = jnp.where(mask, 0, g)
             views[run] = vc
     return views
 
 
-def _scatter_loop_views(cache, views, block_tables, state_slot):
+def _scatter_loop_views(cache, views, block_tables, state_slot, cfg=None):
     """Inverse of ``_loop_views``: commit the views back into the
     resident pools.  Slot-state rows all write their own slot (padding
     rows write trash slot 0), and stopped rows' views hold their state
     as of stopping (iterations after are identity updates), so an
-    unconditional write-back is exact."""
+    unconditional write-back is exact (valid_len=None in the kernel
+    form)."""
+    use_pallas = cfg is not None and cfg.attn_impl == "pallas"
     out = {}
     for run, rc in cache.items():
         vc = views[run]
@@ -584,6 +601,13 @@ def _scatter_loop_views(cache, views, block_tables, state_slot):
                     "v": _scatter_view(rc["v"], block_tables,
                                        vc["vview"]),
                     "block_tables": rc["block_tables"]}
+        elif use_pallas:
+            from repro.kernels import ops as kops
+            out[run] = {
+                name: jax.vmap(
+                    lambda p, v: kops.slot_scatter(p, state_slot, None, v)
+                )(rc[name], vc[f"{name}_view"].astype(rc[name].dtype))
+                for name in rc}
         else:
             out[run] = {
                 name: rc[name].at[:, state_slot].set(
@@ -661,7 +685,7 @@ def paged_decode_loop(params, cache, slot_buf, block_tables, meta, cfg,
     spare = slot_buf.shape[0] - 1
     # pools -> per-row resident views: the pool gather/scatter and the
     # block-table indirection are paid once per dispatch, not per token
-    views = _loop_views(cache, block_tables, state_slot, pos0)
+    views = _loop_views(cache, block_tables, state_slot, pos0, cfg)
 
     def body(i, carry):
         views, slot_buf, out, counts, stopped = carry
@@ -685,7 +709,7 @@ def paged_decode_loop(params, cache, slot_buf, block_tables, meta, cfg,
                                  need_logits=False)
         logits = _logits(params, h[:, :1], cfg)[:, 0].astype(jnp.float32)
         tok = _sample_rows(logits, rid, pos + 1, temperature=temperature,
-                           top_k=top_k, seed=seed)
+                           top_k=top_k, seed=seed, impl=cfg.attn_impl)
         hit = active & (eos >= 0) & (tok == eos)
         out = out.at[:, i].set(jnp.where(active, tok, -1))
         # inactive rows dump their (garbage) sample into the spare slot
@@ -698,7 +722,7 @@ def paged_decode_loop(params, cache, slot_buf, block_tables, meta, cfg,
     views, slot_buf, out, counts, stopped = jax.lax.fori_loop(
         0, num_steps, body, carry)
     cache = _canonical_block_tables(
-        _scatter_loop_views(cache, views, block_tables, state_slot))
+        _scatter_loop_views(cache, views, block_tables, state_slot, cfg))
     # `stopped` is only ever set by eos (budget/capacity stops come from
     # the predicate, not the carry), so it doubles as the eos flag
     return out, counts, stopped, slot_buf, cache

@@ -326,3 +326,304 @@ def test_ssd_chunked_pallas_matches_jnp_end_to_end():
                                rtol=2e-4)
     np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=2e-4,
                                rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# view-resident decode attend (N-step loop kview branch)
+# ---------------------------------------------------------------------------
+
+VIEW_SHAPES = [
+    # b, s(view incl. trash slot), kv, g, hd, window
+    (3, 41, 2, 3, 48, 0),       # odd S, unaligned hd
+    (2, 129, 1, 4, 64, 0),
+    (2, 257, 4, 2, 128, 20),    # aligned hd + sliding window
+    (4, 65, 2, 1, 96, 7),
+]
+
+
+@pytest.mark.parametrize("case", VIEW_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_attend_view_kernel_sweep(case, dt):
+    """ops.decode_view_attend vs the model's jnp view attend
+    (attention.paged_decode_attention — the exec-path oracle the kernel
+    replaces inside the fori_loop).  The last view slot plays the trash
+    row: it holds garbage and live positions never reach it."""
+    from repro.models import attention as mattn
+    b, s, kv, g, hd, window = case
+    h = kv * g
+    ks = jax.random.split(jax.random.key(sum(case)), 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32).astype(dt)
+    rng = np.random.default_rng(sum(case))
+    # live rows satisfy pos <= sview - 1 = s - 2 (slot s-1 is trash)
+    pos = jnp.asarray(rng.integers(0, s - 1, (b,)), jnp.int32)
+    o1 = ops.decode_view_attend(q, k, v, pos, window=window)
+    o2 = mattn.paged_decode_attention(
+        q.reshape(b, 1, kv, g, hd), k, v, pos[:, None],
+        window=window).reshape(b, h, hd)
+    assert o1.shape == (b, h, hd) and o1.dtype == q.dtype
+    np.testing.assert_allclose(np.float32(o1), np.float32(o2), **_tol(dt))
+
+
+def test_attend_view_kernel_ignores_trash_and_frontier_garbage():
+    """Poisoning every slot past each row's position (including the
+    trash slot) with huge values must not change the output."""
+    b, s, kv, g, hd = 2, 33, 2, 2, 64
+    h = kv * g
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    pos = jnp.asarray([10, 31], jnp.int32)
+    o_clean = ops.decode_view_attend(q, k, v, pos)
+    mask = jnp.arange(s)[None, :, None, None] > pos[:, None, None, None]
+    k_bad = jnp.where(mask, 1e4, k)
+    v_bad = jnp.where(mask, -1e4, v)
+    o_pois = ops.decode_view_attend(q, k_bad, v_bad, pos)
+    np.testing.assert_allclose(np.asarray(o_clean), np.asarray(o_pois),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent attends (absorbed-query, view + paged pool forms)
+# ---------------------------------------------------------------------------
+
+MLA_VIEW_SHAPES = [
+    # b, c, h, r, rd, s
+    (2, 1, 4, 24, 12, 37),      # odd everything (lane-pads r/rd/S)
+    (3, 1, 2, 128, 128, 128),   # aligned fast path
+    (2, 3, 4, 16, 8, 65),       # chunked queries
+]
+
+
+@pytest.mark.parametrize("case", MLA_VIEW_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_mla_latent_kernel_views_sweep(case, dt):
+    b, c, h, r, rd, s = case
+    ks = jax.random.split(jax.random.key(sum(case)), 4)
+    q_lat = jax.random.normal(ks[0], (b, c, h, r), jnp.float32).astype(dt)
+    q_rope = jax.random.normal(ks[1], (b, c, h, rd), jnp.float32).astype(dt)
+    ckv = jax.random.normal(ks[2], (b, s, r), jnp.float32).astype(dt)
+    kr = jax.random.normal(ks[3], (b, s, rd), jnp.float32).astype(dt)
+    rng = np.random.default_rng(sum(case))
+    pos = jnp.asarray(rng.integers(0, s - c, (b,)), jnp.int32)
+    scale = 1.0 / np.sqrt(r + rd)
+    o1 = ops.mla_decode_views(q_lat, q_rope, ckv, kr, pos, scale=scale)
+    o2 = ref.mla_decode_views(q_lat, q_rope, ckv, kr, pos, scale=scale)
+    assert o1.shape == (b, c, h, r) and o1.dtype == q_lat.dtype
+    np.testing.assert_allclose(np.float32(o1), np.float32(o2), **_tol(dt))
+
+
+@pytest.mark.parametrize("case", MLA_PAGED_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_mla_latent_kernel_paged_sweep(case, dt):
+    """The block table rides in scalar prefetch; disjoint shuffled
+    non-trash blocks per row, trash block 0 backing every unassigned
+    table entry."""
+    nb, bs, r, rd, b, c, h, nb_seq = case
+    ks = jax.random.split(jax.random.key(sum(case)), 4)
+    q_lat = jax.random.normal(ks[0], (b, c, h, r), jnp.float32).astype(dt)
+    q_rope = jax.random.normal(ks[1], (b, c, h, rd), jnp.float32).astype(dt)
+    ckv = jax.random.normal(ks[2], (nb, bs, r), jnp.float32).astype(dt)
+    kr = jax.random.normal(ks[3], (nb, bs, rd), jnp.float32).astype(dt)
+    rng = np.random.default_rng(nb)
+    perm = rng.permutation(np.arange(1, nb))[:b * nb_seq]
+    bt = jnp.asarray(perm.reshape(b, nb_seq), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, nb_seq * bs - c + 1, (b,)), jnp.int32)
+    scale = 1.0 / np.sqrt(r + rd)
+    o1 = ops.mla_decode_paged(q_lat, q_rope, ckv, kr, bt, pos, scale=scale)
+    o2 = ref.mla_decode_paged(q_lat, q_rope, ckv, kr, bt, pos, scale=scale)
+    assert o1.shape == (b, c, h, r)
+    np.testing.assert_allclose(np.float32(o1), np.float32(o2), **_tol(dt))
+
+
+def test_mla_latent_kernel_trash_table_rows_are_masked():
+    """Rows whose table is mostly trash block 0 (short sequences) must
+    ignore the trash pool contents entirely: poisoning block 0 changes
+    nothing."""
+    nb, bs, r, rd, b, h, nb_seq = 8, 8, 32, 16, 2, 2, 3
+    ks = jax.random.split(jax.random.key(11), 4)
+    q_lat = jax.random.normal(ks[0], (b, 1, h, r))
+    q_rope = jax.random.normal(ks[1], (b, 1, h, rd))
+    ckv = jax.random.normal(ks[2], (nb, bs, r))
+    kr = jax.random.normal(ks[3], (nb, bs, rd))
+    bt = jnp.asarray([[3, 0, 0], [5, 6, 0]], jnp.int32)
+    pos = jnp.asarray([4, 11], jnp.int32)     # inside the real blocks
+    scale = 1.0 / np.sqrt(r + rd)
+    o_clean = ops.mla_decode_paged(q_lat, q_rope, ckv, kr, bt, pos,
+                                   scale=scale)
+    o_pois = ops.mla_decode_paged(
+        q_lat, q_rope, ckv.at[0].set(1e4), kr.at[0].set(1e4), bt, pos,
+        scale=scale)
+    np.testing.assert_allclose(np.asarray(o_clean), np.asarray(o_pois),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# slot-state gather/scatter (ssm/rglru recurrent pools)
+# ---------------------------------------------------------------------------
+
+SLOT_SHAPES = [
+    # S, B, feature dims
+    (11, 4, (3, 17)),      # conv-tail-like, odd feature size
+    (5, 4, (64,)),         # 1-D state, B == #live (non-trash) slots
+    (33, 2, (4, 2, 32)),   # SSD-state-like 3-D features
+    (9, 3, (128,)),        # lane-aligned fast path
+]
+
+
+@pytest.mark.parametrize("case", SLOT_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_slot_state_kernel_gather_sweep(case, dt):
+    s, b, feat = case
+    rng = np.random.default_rng(s + b)
+    pool = jnp.asarray(rng.standard_normal((s,) + feat), jnp.float32
+                       ).astype(dt)
+    slots = jnp.asarray(rng.permutation(np.arange(1, s))[:b], jnp.int32)
+    fresh = jnp.asarray(rng.integers(0, 2, (b,)).astype(bool))
+    got = ops.slot_gather(pool, slots, fresh)
+    mask = np.asarray(fresh).reshape((b,) + (1,) * len(feat))
+    want = np.where(mask, 0, np.asarray(jnp.float32(pool))[np.asarray(slots)])
+    assert got.shape == (b,) + feat and got.dtype == pool.dtype
+    np.testing.assert_allclose(np.float32(got), want, atol=0, rtol=0)
+
+
+@pytest.mark.parametrize("case", SLOT_SHAPES)
+def test_slot_state_kernel_scatter_sweep(case):
+    """Exact equality with layers.slot_state_scatter: valid rows land in
+    their slot, valid_len == 0 rows route to trash slot 0, untouched
+    pool rows copy through bit-identically."""
+    from repro.models.layers import slot_state_scatter
+    s, b, feat = case
+    rng = np.random.default_rng(s * b)
+    pool = jnp.asarray(rng.standard_normal((s,) + feat), jnp.float32)
+    slots = jnp.asarray(rng.permutation(np.arange(1, s))[:b], jnp.int32)
+    value = jnp.asarray(rng.standard_normal((b,) + feat), jnp.float32)
+    vl = jnp.asarray(rng.integers(0, 3, (b,)), jnp.int32)
+    got = np.asarray(ops.slot_scatter(pool, slots, vl, value))
+    want = np.asarray(slot_state_scatter(pool, slots, vl, value))
+    # trash slot 0 content is unspecified when several valid-0 rows
+    # collide there; everything else must match exactly
+    np.testing.assert_array_equal(got[1:], want[1:])
+    # unconditional form (the loop's view write-back): exact everywhere
+    got2 = np.asarray(ops.slot_scatter(pool, slots, None, value))
+    want2 = np.asarray(slot_state_scatter(pool, slots, None, value))
+    np.testing.assert_array_equal(got2, want2)
+
+
+def test_slot_state_kernel_vmapped_over_layers():
+    """The decode loop vmaps the kernels over the stacked layer axis;
+    gather∘scatter round-trips the pool."""
+    l, s, b, f = 3, 7, 4, 48
+    rng = np.random.default_rng(12)
+    pool = jnp.asarray(rng.standard_normal((l, s, f)), jnp.float32)
+    slots = jnp.asarray([2, 4, 1, 6], jnp.int32)
+    fresh = jnp.zeros((b,), bool)
+    g = jax.vmap(lambda p: ops.slot_gather(p, slots, fresh))(pool)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.asarray(pool[:, slots]))
+    back = jax.vmap(lambda p, v: ops.slot_scatter(p, slots, None, v))(
+        pool, g)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(pool))
+
+
+# ---------------------------------------------------------------------------
+# fused sampling (greedy / gumbel / top-k + gumbel)
+# ---------------------------------------------------------------------------
+
+SAMPLING_SHAPES = [
+    # b, v
+    (5, 203),      # odd vocab (pads past one block)
+    (2, 512),      # exactly one block
+    (3, 1000),     # multi-block, unaligned
+    (8, 4096),
+]
+
+
+@pytest.mark.parametrize("case", SAMPLING_SHAPES)
+def test_sampling_kernel_greedy_exact(case):
+    """Token-identical to jnp.argmax, including first-occurrence ties
+    planted across block boundaries."""
+    b, v = case
+    rng = np.random.default_rng(v)
+    lg = jnp.asarray(rng.standard_normal((b, v)) * 3, jnp.float32)
+    top = float(lg.max()) + 1.0
+    # exact tie in row 0 spanning blocks: argmax must take the first
+    lg = lg.at[0, 7].set(top).at[0, v - 1].set(top)
+    keys = ref.sample_keys(0, np.arange(b), np.arange(b))
+    got = ops.sample_tokens(lg, keys, temperature=0.0, impl="pallas")
+    want = ref.sample_tokens(lg, keys, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(got[0]) == 7
+
+
+@pytest.mark.parametrize("case", SAMPLING_SHAPES)
+@pytest.mark.parametrize("top_k", [0, 1, 17, 64])
+def test_sampling_kernel_matches_oracle_exactly(case, top_k):
+    """The fused kernel must reproduce ref.sample_tokens bit-exactly
+    (same keys → same tokens), not merely in distribution: categorical
+    IS gumbel-max and the kernel replays the oracle's float ops in the
+    same order."""
+    b, v = case
+    rng = np.random.default_rng(v + top_k)
+    lg = jnp.asarray(rng.standard_normal((b, v)) * 2, jnp.float32)
+    keys = ref.sample_keys(7, rng.integers(0, 1 << 20, (b,)),
+                           rng.integers(0, 4096, (b,)))
+    for temp in (0.7, 1.0):
+        got = ops.sample_tokens(lg, keys, temperature=temp, top_k=top_k,
+                                impl="pallas")
+        want = ref.sample_tokens(lg, keys, temperature=temp, top_k=top_k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sampling_kernel_topk_duplicate_kth_values():
+    """lax.top_k's kth threshold keeps ALL entries tied with it; the
+    kernel's iterative max-extraction must agree when the kth value is
+    duplicated (and under -inf-masked vocab entries)."""
+    b, v, k = 3, 600, 8
+    rng = np.random.default_rng(3)
+    lg = np.asarray(rng.standard_normal((b, v)) * 2, np.float32)
+    lg[0, 100:120] = 1.5          # 20 copies straddling the kth position
+    lg[1, :300] = -np.inf         # half the vocab masked out
+    lg = jnp.asarray(lg)
+    keys = ref.sample_keys(1, np.arange(b) + 5, np.arange(b) * 7)
+    got = ops.sample_tokens(lg, keys, temperature=0.9, top_k=k,
+                            impl="pallas")
+    want = ref.sample_tokens(lg, keys, temperature=0.9, top_k=k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sampling_kernel_under_jit_and_engine_keying():
+    """The pallas sampler must be jit-stable with the engine's exact key
+    derivation (fold_in(rid, position)) and agree with the oracle inside
+    the same jit."""
+    b, v = 4, 300
+    lg = jax.random.normal(jax.random.key(0), (b, v)) * 2
+
+    @jax.jit
+    def both(rids, positions):
+        keys = ref.sample_keys(0, rids, positions)
+        return (ops.sample_tokens(lg, keys, temperature=0.8, top_k=12,
+                                  impl="pallas"),
+                ref.sample_tokens(lg, keys, temperature=0.8, top_k=12))
+
+    got, want = both(jnp.arange(b) + 100, jnp.arange(b) * 3 + 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# kernel_spec coverage: every advertised kernel is a real ops function
+# ---------------------------------------------------------------------------
+
+def test_kernel_spec_names_real_ops():
+    from repro.configs.base import get_config, smoke_variant
+    from repro.models.model import build_model
+    for name in ("qwen2-1.5b", "deepseek-v3-671b", "mamba2-370m",
+                 "recurrentgemma-2b"):
+        model = build_model(smoke_variant(get_config(name)))
+        spec = dict(model.paged_spec.kernel_spec)
+        assert "sampling" in spec
+        for kind, entry in spec.items():
+            for op_name in entry.split("/"):
+                assert callable(getattr(ops, op_name)), (name, kind, op_name)

@@ -249,3 +249,83 @@ def test_slot_state_loop_truncates_without_device_tables():
     for r in reqs:
         ref = _sequential_greedy(model, params, r.prompt, r.max_new_tokens)
         assert res[r.rid].tokens == ref
+
+
+# ---------------------------------------------------------------------------
+# attn_impl drop-in: the Pallas decode kernels must be invisible in the
+# tokens (engine == sequential, across families, depths, and sampling)
+# ---------------------------------------------------------------------------
+
+ATTN_IMPLS = ("jnp", "pallas")
+
+
+def _impl_model(family, attn_impl):
+    cfg = (_tiny_qwen2() if family == "qwen2" else _family_config(family))
+    cfg = cfg.replace(attn_impl="naive" if attn_impl == "jnp" else attn_impl)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+@pytest.mark.parametrize("attn_impl", ATTN_IMPLS)
+@pytest.mark.parametrize("family", ["qwen2", "deepseek", "mamba", "rglru"])
+def test_decode_loop_attn_impl_drop_in_greedy(family, attn_impl):
+    """Every family under both attends: the kernels (view attend, MLA
+    latent attends, slot gather/scatter, fused greedy sampling) must be
+    token-identical to the dense sequential reference at depths 1 and 8
+    — interpret mode, so this is the exact math the TPU build runs."""
+    cfg, model, params = _impl_model(family, attn_impl)
+    rng = np.random.default_rng(7)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (int(p),)),
+                    max_new_tokens=int(g), rid=38000 + i)
+            for i, (p, g) in enumerate(zip(rng.integers(3, 20, 2),
+                                           rng.integers(3, 7, 2)))]
+    refs = [_sequential_greedy(model, params, r.prompt, r.max_new_tokens)
+            for r in reqs]
+    for spd in (1, 8):
+        outs, stats = _run_engine(model, params, reqs, spd=spd)
+        assert outs == refs, (family, attn_impl, spd)
+        if spd > 1:
+            assert stats["loop_dispatches"] > 0
+
+
+@pytest.mark.parametrize("attn_impl", ATTN_IMPLS)
+def test_decode_loop_attn_impl_drop_in_sampling(attn_impl):
+    """Seeded temperature + top-k through the fused sampling kernel:
+    same fold_in keys → same tokens as the jnp sampler, at both
+    depths."""
+    cfg, model, params = _impl_model("qwen2", attn_impl)
+    rng = np.random.default_rng(8)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (int(p),)),
+                    max_new_tokens=int(g), rid=39000 + i)
+            for i, (p, g) in enumerate(zip(rng.integers(3, 16, 2),
+                                           rng.integers(3, 6, 2)))]
+    refs = [_sequential_sample(model, params, r.prompt, r.max_new_tokens,
+                               rid=r.rid, temperature=0.8) for r in reqs]
+    for spd in (1, 8):
+        outs, _ = _run_engine(model, params, reqs, spd=spd, temperature=0.8)
+        assert outs == refs, (attn_impl, spd)
+
+
+def test_decode_loop_pallas_preemption_keeps_equivalence():
+    """Forced pool starvation with attn_impl="pallas": partial N-step
+    grants, early loop exit, preempt-and-recompute — the kernels must
+    keep the output token-identical to sequential decode through all of
+    it (trash-block/trash-slot writes never leak into live state)."""
+    cfg = _tiny_qwen2().replace(attn_impl="pallas")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(2)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, (10,)),
+                    max_new_tokens=10, rid=41000 + i) for i in range(3)]
+    eng = Engine(model, params, EngineConfig(
+        max_batch=3, block_size=4, num_blocks=10, max_seq_len=32,
+        prefill_chunk=8, prefill_token_budget=16, steps_per_dispatch=8))
+    res = eng.run([Request(prompt=r.prompt.copy(),
+                           max_new_tokens=r.max_new_tokens, rid=r.rid)
+                   for r in reqs])
+    c = eng.metrics_snapshot()["counters"]
+    assert c["loop_truncations"] > 0
+    assert c["preemptions"] > 0
+    for r in reqs:
+        ref = _sequential_greedy(model, params, r.prompt, r.max_new_tokens)
+        assert res[r.rid].tokens == ref
