@@ -19,7 +19,7 @@ after the warmup call, the timed iterations must not trigger any new XLA
 compilation; churn fails the run with exit 1.
 
     PYTHONPATH=src python benchmarks/kernels_bench.py
-    python benchmarks/kernels_bench.py --json    # writes kernels_bench.json
+    python benchmarks/kernels_bench.py --json    # writes out/kernels_bench.json
 """
 from __future__ import annotations
 
@@ -40,8 +40,10 @@ from repro.kernels import ops, ref
 HBM = 819e9        # v5e HBM bandwidth, bytes/s
 MXU = 197e12       # v5e bf16 matmul, FLOP/s
 
+# artifacts land under benchmarks/out/ (gitignored) so a local --json
+# run can never leave a stray report at the repo root of the bench dir
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                         "kernels_bench.json")
+                         "out", "kernels_bench.json")
 
 
 def _timed(fn, fargs, iters):
@@ -272,6 +274,7 @@ def main(argv=(), print_fn=print):
         print_fn(f"FAIL: public kernels ops without a bench row: {missing}")
         sys.exit(1)
     if args.json:
+        os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
         with open(JSON_PATH, "w") as f:
             json.dump({"rows": rows, "iters": args.iters,
                        "interpret": True}, f, indent=2)

@@ -1,0 +1,23 @@
+"""Static analysis over the kernels and the serving host layer.
+
+Three passes, one CLI (``python -m repro.analysis``), one CI gate:
+
+  kernel       Mosaic-compat lint: trace every public ``kernels.ops``
+               entry at representative shapes and enforce the TPU
+               lowering constraints interpret mode ignores (KC rules)
+  hotpath      jaxpr lints over ``paged_step``/``paged_decode_loop``
+               for every servable config: host round-trips, donation
+               drift, jit-signature hazards (HP rules)
+  concurrency  AST lock-discipline lint over ``repro.serve`` (SC rules)
+
+Findings are fingerprinted (rule + site, no line numbers); accepted
+deviations live in ``baseline.json`` next to this package with a
+reason and a ROADMAP pointer each.  The CLI exits non-zero on any
+non-baselined finding — pre-existing debt stays visible without
+blocking unrelated work, and new debt cannot land silently.
+"""
+from repro.analysis.common import (Baseline, Finding, render_report,
+                                   split_findings, write_json)
+
+__all__ = ["Baseline", "Finding", "render_report", "split_findings",
+           "write_json"]

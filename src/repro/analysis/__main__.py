@@ -1,0 +1,61 @@
+"""CLI: ``python -m repro.analysis [--all | --kernel --hotpath
+--concurrency] [--json PATH] [--baseline PATH]``.
+
+Exit status is the number of NON-baselined findings (0 = clean or
+fully baselined) — the CI gate is simply this process's exit code.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.common import Baseline, render_report, write_json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis gates: Mosaic kernel compat, "
+                    "hot-path jaxpr lints, serve lock discipline.")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when none selected)")
+    ap.add_argument("--kernel", action="store_true",
+                    help="Pass 1: Mosaic-compat kernel checker (KC rules)")
+    ap.add_argument("--hotpath", action="store_true",
+                    help="Pass 2: dispatch jaxpr lints (HP rules)")
+    ap.add_argument("--concurrency", action="store_true",
+                    help="Pass 3: serve lock-discipline lint (SC rules)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full report as JSON")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="baseline file (default: the checked-in "
+                         "src/repro/analysis/baseline.json)")
+    args = ap.parse_args(argv)
+
+    which = {"kernel": args.kernel, "hotpath": args.hotpath,
+             "concurrency": args.concurrency}
+    if args.all or not any(which.values()):
+        which = {k: True for k in which}
+
+    results = {}
+    if which["kernel"]:
+        from repro.analysis import kernel_check
+        results["kernel"] = kernel_check.run()
+    if which["hotpath"]:
+        from repro.analysis import hotpath_check
+        results["hotpath"] = hotpath_check.run()
+    if which["concurrency"]:
+        from repro.analysis import concurrency_check
+        results["concurrency"] = concurrency_check.run()
+
+    baseline = Baseline.load(args.baseline)
+    blocking = render_report(results, baseline)
+    if args.json:
+        write_json(args.json, results, baseline)
+        print(f"report written to {args.json}")
+    print(f"blocking findings: {blocking}")
+    return min(blocking, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Shared plumbing for the ``repro.analysis`` static passes: the
+Finding record every rule emits, the checked-in baseline that lets
+accepted deviations ride without blocking CI, and the report assembly
+the CLI prints / serializes.
+
+A finding's ``fingerprint`` is deliberately line-number-free (rule +
+stable location + stable detail key), so baselines survive unrelated
+edits to the same file and only go stale when the flagged construct
+itself moves or disappears.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baseline.json")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    rule      stable rule ID (KCxxx kernel, HPxxx hot path, SCxxx
+              concurrency) — the README rule table is keyed on these
+    where     stable location: "op/variant" (kernel), "arch/fn" (hot
+              path), "file:Class.method" (concurrency)
+    obj       the flagged object within ``where`` (scratch index, attr
+              name, block operand, ...) — part of the fingerprint
+    detail    human-readable description of what was found
+    fixit     what to change (every rule must suggest a fix)
+    """
+    rule: str
+    where: str
+    obj: str
+    detail: str
+    fixit: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.where}:{self.obj}"
+
+    def as_dict(self) -> Dict[str, str]:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+
+@dataclass
+class Baseline:
+    """Accepted pre-existing deviations, keyed by fingerprint.  Each
+    entry carries the reason it is deferred and (for kernel findings)
+    the ROADMAP bullet tracking the real fix."""
+    entries: Dict[str, Dict[str, str]] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: Optional[str] = None) -> "Baseline":
+        path = BASELINE_PATH if path is None else path
+        if not os.path.exists(path):
+            return cls()
+        with open(path) as f:
+            doc = json.load(f)
+        return cls(entries={e["fingerprint"]: e for e in doc["entries"]})
+
+    def matches(self, finding: Finding) -> bool:
+        return finding.fingerprint in self.entries
+
+    def stale(self, findings: Sequence[Finding]) -> List[str]:
+        """Baseline fingerprints no live finding matches any more —
+        the deviation was fixed; the entry should be deleted."""
+        live = {f.fingerprint for f in findings}
+        return sorted(fp for fp in self.entries if fp not in live)
+
+
+def split_findings(findings: Sequence[Finding], baseline: Baseline
+                   ) -> Tuple[List[Finding], List[Finding]]:
+    """(blocking, baselined)."""
+    blocking = [f for f in findings if not baseline.matches(f)]
+    accepted = [f for f in findings if baseline.matches(f)]
+    return blocking, accepted
+
+
+def render_report(results: Dict[str, List[Finding]], baseline: Baseline,
+                  print_fn=print) -> int:
+    """Print the per-pass tables; returns the count of non-baselined
+    (blocking) findings."""
+    blocking_total = 0
+    all_findings: List[Finding] = []
+    for pass_name, findings in results.items():
+        all_findings.extend(findings)
+        blocking, accepted = split_findings(findings, baseline)
+        blocking_total += len(blocking)
+        print_fn(f"== {pass_name}: {len(blocking)} blocking, "
+                 f"{len(accepted)} baselined ==")
+        for f in blocking:
+            print_fn(f"  {f.rule} {f.where} [{f.obj}]")
+            print_fn(f"      {f.detail}")
+            print_fn(f"      fix: {f.fixit}")
+        for f in accepted:
+            entry = baseline.entries[f.fingerprint]
+            print_fn(f"  {f.rule} {f.where} [{f.obj}] "
+                     f"(baselined: {entry.get('reason', '?')})")
+    for fp in baseline.stale(all_findings):
+        print_fn(f"WARNING: stale baseline entry (finding no longer "
+                 f"fires, delete it): {fp}")
+    return blocking_total
+
+
+def write_json(path: str, results: Dict[str, List[Finding]],
+               baseline: Baseline) -> None:
+    doc = {"passes": {}}
+    for pass_name, findings in results.items():
+        blocking, accepted = split_findings(findings, baseline)
+        doc["passes"][pass_name] = {
+            "blocking": [f.as_dict() for f in blocking],
+            "baselined": [f.as_dict() for f in accepted],
+        }
+    doc["blocking_total"] = sum(
+        len(p["blocking"]) for p in doc["passes"].values())
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)

@@ -1,0 +1,387 @@
+"""Pass 3 — lock-discipline lint over the serving host layer.
+
+The serve frontend is real multi-threaded code: one worker thread per
+replica plus whatever client threads call ``submit``/``cancel``/
+``metrics``.  JAX never sees those races — they live in plain Python
+dicts and lists — so neither the kernel checker nor the hot-path
+tracer can catch them.  This pass does, purely from the AST:
+
+  1. find *worker-root* classes: any class that launches a thread at
+     one of its own methods (``threading.Thread(target=self._worker)``);
+  2. mark the state reachable from both sides as *shared*: the root
+     class itself, plus (one hop) every class its ``__init__``
+     constructs and every class named in a worker entry's parameter
+     annotations.  The hop limit is deliberate: objects two hops out
+     (e.g. the metric handles inside the telemetry registry) are
+     reached only through internally-locked intermediaries, and lint
+     findings on them would be noise — the limit is documented here so
+     nobody mistakes silence for proof;
+  3. inside each shared class, every touch of a *mutable-after-init*
+     attribute (rebound, item-assigned, or hit with a container
+     mutator outside ``__init__``) must happen under ``with
+     self.<lock>`` (any ``threading.Lock/RLock/Condition/Semaphore``
+     the class created in ``__init__``), in a private method only ever
+     called from under the lock, or carry an explicit
+     ``# analysis: single-writer`` annotation stating why the free
+     access is safe.
+
+Rules:
+
+  SC001  unguarded WRITE to shared mutable state
+  SC002  unguarded READ of shared mutable state (torn reads: dict
+         resize mid-iteration, len() vs concurrent pop, ...)
+  SC003  ``return self.<mutable>`` — handing the live container to the
+         caller escapes the lock even when the return itself is
+         guarded; return a copy
+
+Attributes assigned only in ``__init__`` are immutable-after-init and
+free to read anywhere.  Attributes holding internally-synchronized
+stdlib types (``queue.Queue``, ``threading.Event``, ...) are exempt
+unless rebound.  A class-level ``# analysis: single-writer`` comment
+(on or directly above the ``class`` line) exempts the whole class and
+stops propagation — it is a claim, recorded next to the code, that one
+thread owns all mutation and hand-off points are fenced.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.common import Finding
+
+ANNOTATION = "analysis: single-writer"
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore",
+               "BoundedSemaphore"}
+_SAFE_CTORS = {"Queue", "LifoQueue", "PriorityQueue", "SimpleQueue",
+               "Event", "Barrier"}
+_MUTATORS = {"append", "appendleft", "extend", "insert", "add", "update",
+             "pop", "popleft", "popitem", "remove", "discard", "clear",
+             "setdefault"}
+
+
+def _call_name(node: ast.AST) -> Optional[str]:
+    """Trailing name of a call target: ``threading.Lock`` -> 'Lock'."""
+    if not isinstance(node, ast.Call):
+        return None
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _subscript_base_attr(node: ast.AST) -> Optional[ast.Attribute]:
+    """The ``self.x`` at the base of ``self.x[...][...]``, if any."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if _self_attr(node) is not None:
+        return node  # type: ignore[return-value]
+    return None
+
+
+@dataclass
+class _Touch:
+    attr: str
+    write: bool
+    rebind: bool          # Assign/Del of the attribute itself
+    locked: bool
+    lineno: int
+
+
+class _MethodScan(ast.NodeVisitor):
+    """One method body: every ``self.<attr>`` touch with its lexical
+    lock context, plus intra-class calls and live-container returns."""
+
+    def __init__(self, lock_attrs: Set[str]):
+        self.lock_attrs = lock_attrs
+        self.locked = False
+        self.touches: List[_Touch] = []
+        self.calls: List[Tuple[str, bool]] = []      # (method, locked)
+        self.returns: List[Tuple[str, bool, int]] = []
+        self._counted: Set[int] = set()
+
+    def _touch(self, node: ast.Attribute, write: bool, rebind: bool):
+        if id(node) in self._counted:
+            return
+        self._counted.add(id(node))
+        self.touches.append(_Touch(node.attr, write, rebind, self.locked,
+                                   node.lineno))
+
+    def visit_With(self, node: ast.With):
+        is_lock = any(_self_attr(i.context_expr) in self.lock_attrs
+                      for i in node.items)
+        for i in node.items:
+            self.visit(i.context_expr)
+            if i.optional_vars is not None:
+                self.visit(i.optional_vars)
+        prev, self.locked = self.locked, self.locked or is_lock
+        for stmt in node.body:
+            self.visit(stmt)
+        self.locked = prev
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if _self_attr(node) is not None:
+            self._touch(node, isinstance(node.ctx, (ast.Store, ast.Del)),
+                        rebind=isinstance(node.ctx, (ast.Store, ast.Del)))
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript):
+        if isinstance(node.ctx, (ast.Store, ast.Del)):
+            base = _subscript_base_attr(node.value)
+            if base is not None:
+                self._touch(base, write=True, rebind=False)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            owner = _self_attr(f.value)
+            if owner is not None and f.attr in _MUTATORS:
+                self._touch(f.value, write=True, rebind=False)
+            base = _subscript_base_attr(f.value)
+            if base is not None and f.attr in _MUTATORS:
+                self._touch(base, write=True, rebind=False)
+            if _self_attr(f.value) is None and owner is None \
+                    and isinstance(f.value, ast.Name) \
+                    and f.value.id == "self":
+                pass
+            if isinstance(f.value, ast.Name) and f.value.id == "self":
+                self.calls.append((f.attr, self.locked))
+        self.generic_visit(node)
+
+    def visit_Return(self, node: ast.Return):
+        attr = _self_attr(node.value) if node.value is not None else None
+        if attr is not None:
+            self.returns.append((attr, self.locked, node.lineno))
+        self.generic_visit(node)
+
+
+@dataclass
+class _ClassInfo:
+    name: str
+    file: str
+    node: ast.ClassDef
+    lines: List[str]
+    single_writer: bool = False
+    lock_attrs: Set[str] = field(default_factory=set)
+    safe_attrs: Set[str] = field(default_factory=set)
+    init_attrs: Set[str] = field(default_factory=set)
+    methods: Dict[str, ast.FunctionDef] = field(default_factory=dict)
+    worker_entries: Set[str] = field(default_factory=set)
+    refs: Set[str] = field(default_factory=set)
+
+
+def _line_annotated(lines: List[str], lineno: int) -> bool:
+    return 0 < lineno <= len(lines) and ANNOTATION in lines[lineno - 1]
+
+
+def _class_annotated(lines: List[str], node: ast.ClassDef) -> bool:
+    if _line_annotated(lines, node.lineno):
+        return True
+    i = node.lineno - 1  # line above the ``class`` line, 1-indexed
+    while i >= 1 and lines[i - 1].strip().startswith("#"):
+        if ANNOTATION in lines[i - 1]:
+            return True
+        i -= 1
+    return False
+
+
+def _scan_class(node: ast.ClassDef, fname: str,
+                lines: List[str], class_names: Set[str]) -> _ClassInfo:
+    info = _ClassInfo(node.name, fname, node, lines,
+                      single_writer=_class_annotated(lines, node))
+    for item in node.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            info.methods[item.name] = item
+    init = info.methods.get("__init__")
+    if init is not None:
+        for sub in ast.walk(init):
+            targets = []
+            if isinstance(sub, ast.Assign):
+                targets, value = sub.targets, sub.value
+            elif isinstance(sub, ast.AnnAssign) and sub.value is not None:
+                targets, value = [sub.target], sub.value
+            else:
+                continue
+            for t in targets:
+                attr = _self_attr(t)
+                if attr is None:
+                    continue
+                info.init_attrs.add(attr)
+                cn = _call_name(value)
+                if cn in _LOCK_CTORS:
+                    info.lock_attrs.add(attr)
+                elif cn in _SAFE_CTORS:
+                    info.safe_attrs.add(attr)
+        for sub in ast.walk(init):
+            cn = _call_name(sub)
+            if cn in class_names and cn != node.name:
+                info.refs.add(cn)
+    for meth in info.methods.values():
+        for sub in ast.walk(meth):
+            if _call_name(sub) == "Thread":
+                for kw in sub.keywords:
+                    if kw.arg == "target":
+                        target = _self_attr(kw.value)
+                        if target is not None:
+                            info.worker_entries.add(target)
+    return info
+
+
+def _entry_annotation_refs(info: _ClassInfo,
+                           class_names: Set[str]) -> Set[str]:
+    """Class names from worker-entry parameter annotations — the
+    objects the launcher hands its worker thread."""
+    out: Set[str] = set()
+    for name in info.worker_entries:
+        meth = info.methods.get(name)
+        if meth is None:
+            continue
+        for arg in meth.args.args + meth.args.kwonlyargs:
+            ann = arg.annotation
+            if isinstance(ann, ast.Name) and ann.id in class_names:
+                out.add(ann.id)
+            elif isinstance(ann, ast.Constant) \
+                    and ann.value in class_names:
+                out.add(ann.value)
+            elif isinstance(ann, ast.Attribute) and ann.attr in class_names:
+                out.add(ann.attr)
+    return out
+
+
+def _lint_class(info: _ClassInfo) -> List[Finding]:
+    scans: Dict[str, _MethodScan] = {}
+    for name, meth in info.methods.items():
+        if name == "__init__":
+            continue
+        s = _MethodScan(info.lock_attrs)
+        for stmt in meth.body:
+            s.visit(stmt)
+        scans[name] = s
+
+    mutable: Set[str] = set()
+    for s in scans.values():
+        for t in s.touches:
+            if not t.write:
+                continue
+            if t.attr in info.safe_attrs and not t.rebind:
+                continue  # internally-synchronized stdlib object
+            mutable.add(t.attr)
+
+    # a private method called only from under the lock runs under the
+    # lock; iterate because guarded methods can call further helpers
+    callsites: Dict[str, List[Tuple[str, bool]]] = {}
+    for caller, s in scans.items():
+        for callee, locked in s.calls:
+            callsites.setdefault(callee, []).append((caller, locked))
+    guarded: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for name in scans:
+            if name in guarded or not name.startswith("_") \
+                    or name.startswith("__"):
+                continue
+            sites = callsites.get(name)
+            if sites and all(locked or caller in guarded
+                             for caller, locked in sites):
+                guarded.add(name)
+                changed = True
+
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, str, str]] = set()
+
+    def emit(rule: str, method: str, attr: str, detail: str, fixit: str):
+        key = (rule, method, attr)
+        if key not in seen:
+            seen.add(key)
+            findings.append(Finding(
+                rule, f"{info.file}:{info.name}.{method}", attr, detail,
+                fixit))
+
+    lock_hint = (f"with self.{sorted(info.lock_attrs)[0]}"
+                 if info.lock_attrs
+                 else "a threading.Lock created in __init__")
+    for name, s in scans.items():
+        in_lock_ctx = name in guarded
+        for t in s.touches:
+            if t.attr not in mutable or t.locked or in_lock_ctx:
+                continue
+            if _line_annotated(info.lines, t.lineno):
+                continue
+            if t.write:
+                emit("SC001", name, t.attr,
+                     f"write to shared mutable 'self.{t.attr}' outside "
+                     f"the lock — worker threads and callers race on it",
+                     f"guard the block with {lock_hint}, or annotate the "
+                     f"line '# {ANNOTATION}' with why one thread owns it")
+            else:
+                emit("SC002", name, t.attr,
+                     f"read of shared mutable 'self.{t.attr}' outside "
+                     f"the lock — concurrent mutation tears the read",
+                     f"guard the read with {lock_hint} (snapshot, then "
+                     f"work on the copy)")
+        for attr, _locked, lineno in s.returns:
+            if attr in mutable and not _line_annotated(info.lines, lineno):
+                emit("SC003", name, attr,
+                     f"'return self.{attr}' hands the live mutable "
+                     f"container to the caller — every later access "
+                     f"escapes the lock",
+                     f"return a copy (dict/list/tuple(self.{attr}))")
+    return findings
+
+
+def run(root: Optional[str] = None) -> List[Finding]:
+    """Lint every class reachable from a thread launch under ``root``
+    (default: the installed ``repro.serve`` package directory)."""
+    if root is None:
+        import repro.serve
+        root = os.path.dirname(os.path.abspath(repro.serve.__file__))
+    registry: Dict[str, _ClassInfo] = {}
+    parsed: List[Tuple[str, ast.Module, List[str]]] = []
+    for fname in sorted(os.listdir(root)):
+        if not fname.endswith(".py"):
+            continue
+        path = os.path.join(root, fname)
+        with open(path) as f:
+            src = f.read()
+        parsed.append((fname, ast.parse(src), src.splitlines()))
+    class_names = {node.name
+                   for _, tree, _ in parsed
+                   for node in ast.walk(tree)
+                   if isinstance(node, ast.ClassDef)}
+    for fname, tree, lines in parsed:
+        for node in tree.body:
+            if isinstance(node, ast.ClassDef):
+                registry[node.name] = _scan_class(node, fname, lines,
+                                                  class_names)
+
+    shared: Set[str] = set()
+    for info in registry.values():
+        if not info.worker_entries:
+            continue
+        shared.add(info.name)
+        if info.single_writer:
+            continue  # the claim covers everything it hands its worker
+        shared |= info.refs
+        shared |= _entry_annotation_refs(info, class_names)
+
+    findings: List[Finding] = []
+    for name in sorted(shared):
+        info = registry.get(name)
+        if info is None or info.single_writer:
+            continue
+        findings += _lint_class(info)
+    return findings

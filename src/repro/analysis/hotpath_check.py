@@ -1,0 +1,258 @@
+"""Pass 2 — hot-path jaxpr lints over the serving dispatch surface.
+
+For every servable seed config (the same filter the engine applies:
+``paged_step`` exists, not encoder-decoder, not multimodal) this pass
+shape-only traces ``paged_step`` and ``paged_decode_loop`` at the
+engine's representative decode shapes — greedy AND temperature/top-k,
+the two jit variants warmup compiles — and lints the traced jaxpr for
+the bug classes that have actually bitten this engine:
+
+  HP001  host round-trip: a callback primitive (pure_callback /
+         io_callback / debug_callback) inside the dispatch — one host
+         sync per step kills the N-step pipeline
+  HP002  trace failure from host-style control flow: ``device_get`` /
+         tracer ``__bool__`` / ``__int__`` on device values (the trace
+         itself raises; the finding carries the error)
+  HP003  donation drift: a large output that shape/dtype-matches only
+         NON-donated inputs (should alias — every undonated pool is a
+         full copy per step), or a donated arg whose buffers never
+         reappear in the outputs (the donation is a lie and XLA copies
+         anyway).  Cross-checked against the engine's actual
+         ``PAGED_DONATE_ARGNUMS`` contract, not a local copy.
+  HP004  large constant baked into the traced jaxpr — closure capture
+         of device data (params/pools must arrive as arguments or
+         every jit cache entry pins its own copy)
+  HP005  jit-signature hazard: a weak-typed leaf in the traced
+         signature (a Python scalar reached tracing — the PR-5 bug
+         class: every distinct value recompiles) or a float64 leaf
+         (x64 drift)
+
+Tracing uses ``jax.eval_shape``/``ShapeDtypeStruct`` throughout:
+nothing is allocated, initialized, or executed — a full sweep over
+every servable config is a few seconds of abstract evaluation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.common import Finding
+
+# one full pool copy per step is the cost of a missed donation; at the
+# smoke shapes this pass traces, every per-layer pool clears 64 KiB
+# while tokens/meta/tables stay well under it
+_LARGE_BYTES = 64 * 1024
+
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback",
+                   "callback"}
+
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            vals = v if isinstance(v, (list, tuple)) else [v]
+            for s in vals:
+                inner = getattr(s, "jaxpr", None)
+                if inner is not None:
+                    yield from _walk_eqns(inner)
+                elif type(s).__name__ == "Jaxpr":
+                    yield from _walk_eqns(s)
+
+
+def _nbytes(aval) -> int:
+    size = 1
+    for d in getattr(aval, "shape", ()):
+        size *= d
+    return size * jnp.dtype(aval.dtype).itemsize
+
+
+def check_fn(name: str, fn: Callable, args: Sequence[Any],
+             donate: Tuple[int, ...] = ()) -> List[Finding]:
+    """All HP rules against one traced callable.  ``donate`` lists the
+    positional argnums whose buffers the caller aliases in place."""
+    findings: List[Finding] = []
+    try:
+        closed = jax.make_jaxpr(fn)(*args)
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerBoolConversionError,
+            jax.errors.TracerIntegerConversionError) as e:
+        findings.append(Finding(
+            "HP002", name, type(e).__name__,
+            "tracing hit a host round-trip (device_get / tracer "
+            f"__bool__ / __int__): {str(e).splitlines()[0][:160]}",
+            "keep control flow on device (lax.cond/select/while_loop) "
+            "or hoist the decision to static host state"))
+        return findings
+
+    # HP001: callbacks in the dispatch
+    seen = set()
+    for eqn in _walk_eqns(closed.jaxpr):
+        pname = eqn.primitive.name
+        if pname in _CALLBACK_PRIMS and pname not in seen:
+            seen.add(pname)
+            findings.append(Finding(
+                "HP001", name, pname,
+                f"'{pname}' inside the dispatch — a host sync per step "
+                f"serializes the decode loop on the slow fabric",
+                "move the callback out of the jitted hot path (metrics "
+                "and tracing read results after dispatch)"))
+
+    # HP003: donation cross-check, both directions
+    def aval_of(leaf):
+        # Python scalars have no .shape/.dtype — abstract them the way
+        # jit would (which is exactly how they become weak-typed leaves)
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return leaf
+        return jax.api_util.shaped_abstractify(leaf)
+
+    flat_args = [[aval_of(leaf) for leaf in jax.tree_util.tree_leaves(a)]
+                 for a in args]
+    out_avals = [ov.aval for ov in closed.jaxpr.outvars]
+
+    def key(x):
+        return (tuple(x.shape), jnp.dtype(x.dtype).name)
+
+    donated_keys = {key(leaf) for i in donate if i < len(flat_args)
+                    for leaf in flat_args[i]}
+    input_keys = {key(leaf) for leaves in flat_args for leaf in leaves}
+    out_keys = {key(a) for a in out_avals}
+    for aval in out_avals:
+        k = key(aval)
+        if (_nbytes(aval) >= _LARGE_BYTES and k in input_keys
+                and k not in donated_keys):
+            findings.append(Finding(
+                "HP003", name, f"out:{k[1]}{k[0]}",
+                f"large output {k[1]}{k[0]} ({_nbytes(aval)} bytes) "
+                f"matches a non-donated input — XLA copies the whole "
+                f"buffer every dispatch instead of aliasing",
+                "add the matching argnum to PAGED_DONATE_ARGNUMS (and "
+                "the engine's donate_argnums) so the update lands in "
+                "place"))
+    for i in donate:
+        if i >= len(flat_args):
+            continue
+        missing = [key(leaf) for leaf in flat_args[i]
+                   if key(leaf) not in out_keys]
+        if missing:
+            findings.append(Finding(
+                "HP003", name, f"arg{i}:undonatable",
+                f"donated arg {i} has leaves {missing[:3]} that never "
+                f"reappear in the outputs — the donation cannot alias "
+                f"and XLA silently copies",
+                "return the updated buffer (threading it through the "
+                "call) or drop the argnum from the donate list"))
+
+    # HP004: large baked constants
+    for c in closed.consts:
+        nb = getattr(c, "nbytes", 0)
+        if nb >= _LARGE_BYTES:
+            findings.append(Finding(
+                "HP004", name,
+                f"const:{getattr(c, 'dtype', '?')}{getattr(c, 'shape', '?')}",
+                f"{nb}-byte constant baked into the traced jaxpr — "
+                f"closure-captured device data is re-uploaded per jit "
+                f"cache entry",
+                "pass the array as an argument instead of closing over "
+                "it"))
+
+    # HP005: signature hazards
+    for i, leaves in enumerate(flat_args):
+        for aval in leaves:
+            if getattr(aval, "weak_type", False):
+                findings.append(Finding(
+                    "HP005", name, f"arg{i}:weak:{key(aval)}",
+                    f"arg {i} carries a weak-typed leaf {key(aval)} — a "
+                    f"Python scalar reached the traced signature; every "
+                    f"distinct value is a fresh compile (the PR-5 "
+                    f"mid-serving recompile bug)",
+                    "bake scalars as jit statics or cast with an "
+                    "explicit dtype before the call"))
+            elif jnp.dtype(aval.dtype) == jnp.float64:
+                findings.append(Finding(
+                    "HP005", name, f"arg{i}:f64:{key(aval)}",
+                    f"arg {i} carries a float64 leaf {key(aval)} in the "
+                    f"dispatch signature",
+                    "serve dtypes are f32/bf16; cast on the host"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the serving surface: every servable seed config, both jit variants
+# ---------------------------------------------------------------------------
+
+
+def servable_archs() -> List[str]:
+    """Archs the engine can actually serve (same gate Engine.__init__
+    enforces), by seed config name."""
+    from repro.configs.base import available_archs, get_config, smoke_variant
+    from repro.models.model import build_model
+    out = []
+    for arch in available_archs():
+        cfg = smoke_variant(get_config(arch)).replace(mtp_depth=0)
+        model = build_model(cfg)
+        if (model.paged_step is not None and not cfg.is_encoder_decoder
+                and not cfg.num_image_tokens):
+            out.append(arch)
+    return out
+
+
+def _engine_inputs(model, ecfg):
+    """ShapeDtypeStructs for one decode dispatch at the engine's
+    largest decode bucket — the exact recipe Engine warmup compiles
+    (tokens/meta/tables layouts from engine._note_tp_collectives)."""
+    i32 = jnp.int32
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    cache = jax.eval_shape(functools.partial(
+        model.init_paged_cache, ecfg.num_blocks, ecfg.block_size,
+        ecfg.max_batch, ecfg.blocks_per_seq,
+        num_state_slots=ecfg.num_slots + 1))
+    rows = ecfg.decode_buckets[0]
+    return dict(
+        params=params, cache=cache,
+        slot_buf=jax.ShapeDtypeStruct((ecfg.num_slots + 1,), i32),
+        tokens=jax.ShapeDtypeStruct((rows, 1), i32),
+        tables=jax.ShapeDtypeStruct((rows, ecfg.blocks_per_seq), i32),
+        meta=jax.ShapeDtypeStruct((6, rows), i32))
+
+
+def check_arch(arch: str, ecfg=None) -> List[Finding]:
+    """Trace + lint both dispatch entry points for one arch, greedy and
+    sampled (the two executables warmup builds)."""
+    from repro.configs.base import get_config, smoke_variant
+    from repro.models.model import build_model
+    from repro.serve.engine import PAGED_DONATE_ARGNUMS, EngineConfig
+    cfg = smoke_variant(get_config(arch)).replace(mtp_depth=0)
+    model = build_model(cfg)
+    ecfg = ecfg or EngineConfig(max_batch=4, block_size=16, max_seq_len=64,
+                                prefill_chunk=16, prefill_token_budget=32,
+                                num_blocks=33)
+    inp = _engine_inputs(model, ecfg)
+    findings: List[Finding] = []
+    for variant, kw in (("greedy", dict(temperature=0.0, top_k=0, seed=0)),
+                        ("sampled", dict(temperature=0.8, top_k=8, seed=0))):
+        findings += check_fn(
+            f"{arch}/paged_step/{variant}",
+            functools.partial(model.paged_step, **kw),
+            (inp["params"], inp["cache"], inp["slot_buf"], inp["tokens"],
+             inp["tables"], inp["meta"]),
+            donate=PAGED_DONATE_ARGNUMS)
+        if model.paged_decode_loop is not None:
+            findings += check_fn(
+                f"{arch}/paged_decode_loop/{variant}",
+                functools.partial(model.paged_decode_loop, num_steps=8,
+                                  **kw),
+                (inp["params"], inp["cache"], inp["slot_buf"],
+                 inp["tables"], inp["meta"]),
+                donate=PAGED_DONATE_ARGNUMS)
+    return findings
+
+
+def run(archs: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for arch in (servable_archs() if archs is None else archs):
+        findings += check_arch(arch)
+    return findings

@@ -58,22 +58,27 @@ def _view_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     logits = jnp.where(valid, logits, NEG_INF)
     logits = logits.reshape(h, logits.shape[-1])             # (H, bk)
 
+    # m/l scratches are lane-padded to (H, 128) with every lane equal
+    # (Mosaic wants 128-lane minors; a (H, 1) scratch relayouts every
+    # access) — the keepdims row-stats broadcast across all lanes, and
+    # per-row consumers slice lane 0
     m_prev, l_prev = m_scr[...], l_scr[...]
     m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(logits - m_new)
+    p = jnp.exp(logits - m_new[:, :1])
     l_scr[...] = l_prev * alpha + p.sum(-1, keepdims=True)
     pv = jax.lax.dot_general(
         p.reshape(kv_heads, group, -1), vt,
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)                  # (KV, G, hd)
-    acc_scr[...] = acc_scr[...] * alpha + pv.reshape(h, hd)
+    acc_scr[...] = acc_scr[...] * alpha[:, :1] + pv.reshape(h, hd)
     m_scr[...] = m_new
 
     @pl.when(kb == n_kv_blocks - 1)
     def _fin():
         o_ref[0] = (acc_scr[...]
-                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+                    / jnp.maximum(l_scr[...][:, :1], 1e-30)
+                    ).astype(o_ref.dtype)
 
 
 def decode_view_attend_bhd(q, k, v, pos, *, scale, window=0, block_kv=128,
@@ -104,7 +109,7 @@ def decode_view_attend_bhd(q, k, v, pos, *, scale, window=0, block_kv=128,
                          lambda bi, ki, ps: (bi, ki, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, h, hd), lambda bi, ki, ps: (bi, 0, 0)),
-        scratch_shapes=[_scratch((h, 1)), _scratch((h, 1)),
+        scratch_shapes=[_scratch((h, 128)), _scratch((h, 128)),
                         _scratch((h, hd))],
     )
     return pl.pallas_call(

@@ -76,18 +76,22 @@ def _mla_body(pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref, o_ref,
                                                  0) // heads
     logits = jnp.where(kpos <= qpos, logits, NEG_INF)
 
+    # m/l scratches are lane-padded to (rows, 128) with every lane
+    # equal (Mosaic wants 128-lane minors; a (rows, 1) scratch
+    # relayouts every access) — row-stats broadcast across the lanes,
+    # per-row consumers slice lane 0
     m_prev, l_prev = m_scr[...], l_scr[...]
     m_new = jnp.maximum(m_prev, logits.max(-1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(logits - m_new)
+    p = jnp.exp(logits - m_new[:, :1])
     l_scr[...] = l_prev * alpha + p.sum(-1, keepdims=True)
-    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+    acc_scr[...] = acc_scr[...] * alpha[:, :1] + jax.lax.dot(
         p, ckv, preferred_element_type=jnp.float32)       # (rows, r_pad)
     m_scr[...] = m_new
 
     @pl.when(kb == n_blocks - 1)
     def _fin():
-        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...][:, :1], 1e-30)
                     ).reshape(chunk, heads, r).astype(o_ref.dtype)
 
 
@@ -123,7 +127,7 @@ def mla_views_attend(q_lat, q_rope, ckv, kr, pos, *, scale, block=128,
         ],
         out_specs=pl.BlockSpec((1, c, h, r),
                                lambda bi, ki, ps: (bi, 0, 0, 0)),
-        scratch_shapes=[_scratch((c * h, 1)), _scratch((c * h, 1)),
+        scratch_shapes=[_scratch((c * h, 128)), _scratch((c * h, 128)),
                         _scratch((c * h, r))],
     )
     return pl.pallas_call(
@@ -163,7 +167,7 @@ def mla_paged_attend(q_lat, q_rope, ckv_pool, kr_pool, block_tables, pos,
         ],
         out_specs=pl.BlockSpec((1, c, h, r),
                                lambda bi, ki, bt, ps: (bi, 0, 0, 0)),
-        scratch_shapes=[_scratch((c * h, 1)), _scratch((c * h, 1)),
+        scratch_shapes=[_scratch((c * h, 128)), _scratch((c * h, 128)),
                         _scratch((c * h, r))],
     )
     return pl.pallas_call(

@@ -49,6 +49,14 @@ def _scratch(shape, dtype=jnp.float32):
     return pltpu.VMEM(shape, dtype)
 
 
+def _smem_scalar(dtype=jnp.float32):
+    # the running argmax/kth-value state is a single scalar per row
+    # program: a (1, 1) VMEM scratch would burn a full vector tile and
+    # relayout on every access, so it lives in scalar memory
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.SMEM((1, 1), dtype)
+
+
 def _masked_block(lg_ref, kb, *, vocab, block_v):
     vals = lg_ref[...].astype(jnp.float32)                  # (1, bv)
     cols = kb * block_v + jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
@@ -69,8 +77,8 @@ def _greedy_kernel(lg_ref, o_ref, best_scr, idx_scr, *, vocab, block_v,
 
     @pl.when(kb == 0)
     def _init():
-        best_scr[...] = jnp.full_like(best_scr, -jnp.inf)
-        idx_scr[...] = jnp.zeros_like(idx_scr)
+        best_scr[0, 0] = -jnp.inf
+        idx_scr[0, 0] = 0
 
     vals, cols = _masked_block(lg_ref, kb, vocab=vocab, block_v=block_v)
     _stream_argmax(vals, cols, best_scr, idx_scr, vocab=vocab)
@@ -86,8 +94,8 @@ def _gumbel_kernel(lg_ref, g_ref, o_ref, best_scr, idx_scr, *, vocab,
 
     @pl.when(kb == 0)
     def _init():
-        best_scr[...] = jnp.full_like(best_scr, -jnp.inf)
-        idx_scr[...] = jnp.zeros_like(idx_scr)
+        best_scr[0, 0] = -jnp.inf
+        idx_scr[0, 0] = 0
 
     vals, cols = _masked_block(lg_ref, kb, vocab=vocab, block_v=block_v)
     g = g_ref[...].astype(jnp.float32)
@@ -123,7 +131,10 @@ def _topk_gumbel_kernel(lg_ref, g_ref, o_ref, topk_scr, kth_scr, best_scr,
             first = jnp.where(cand == m, ccols, width).min()
             cand = jnp.where(ccols == first, -jnp.inf, cand)
             tops.append(m)
-        merged = jnp.stack(tops).reshape(1, k)
+        # build the (1, k) row without a 1-D stack intermediate: a (k,)
+        # vector has no VREG layout on TPU (jnp.stack of scalars lowers
+        # through one), so concatenate (1, 1) tiles along lanes instead
+        merged = jnp.concatenate([m.reshape(1, 1) for m in tops], axis=1)
         topk_scr[...] = jnp.pad(
             merged, ((0, 0), (0, topk_scr.shape[1] - k)),
             constant_values=-jnp.inf)
@@ -131,8 +142,8 @@ def _topk_gumbel_kernel(lg_ref, g_ref, o_ref, topk_scr, kth_scr, best_scr,
 
     @pl.when((ph == 1) & (kb == 0))
     def _init_argmax():
-        best_scr[...] = jnp.full_like(best_scr, -jnp.inf)
-        idx_scr[...] = jnp.zeros_like(idx_scr)
+        best_scr[0, 0] = -jnp.inf
+        idx_scr[0, 0] = 0
 
     @pl.when(ph == 1)
     def _phase1():
@@ -166,7 +177,7 @@ def greedy_sample(logits, *, interpret=True):
         grid=(b, nv),
         in_specs=[pl.BlockSpec((1, _BLOCK_V), lambda bi, ki: (bi, ki))],
         out_specs=pl.BlockSpec((1, 1), lambda bi, ki: (bi, 0)),
-        scratch_shapes=[_scratch((1, 1)), _scratch((1, 1), jnp.int32)],
+        scratch_shapes=[_smem_scalar(), _smem_scalar(jnp.int32)],
     )
     out = pl.pallas_call(
         kernel,
@@ -199,7 +210,7 @@ def gumbel_sample(logits, gumbel, *, temperature, top_k=0, interpret=True):
                 pl.BlockSpec((1, _BLOCK_V), lambda bi, ki: (bi, ki)),
             ],
             out_specs=pl.BlockSpec((1, 1), lambda bi, ki: (bi, 0)),
-            scratch_shapes=[_scratch((1, 1)), _scratch((1, 1), jnp.int32)],
+            scratch_shapes=[_smem_scalar(), _smem_scalar(jnp.int32)],
         )
     else:
         kpad = -(-int(top_k) // 128) * 128        # lane-pad the top-k scratch
@@ -214,8 +225,8 @@ def gumbel_sample(logits, gumbel, *, temperature, top_k=0, interpret=True):
                 pl.BlockSpec((1, _BLOCK_V), lambda bi, ph, ki: (bi, ki)),
             ],
             out_specs=pl.BlockSpec((1, 1), lambda bi, ph, ki: (bi, 0)),
-            scratch_shapes=[_scratch((1, kpad)), _scratch((1, 1)),
-                            _scratch((1, 1)), _scratch((1, 1), jnp.int32)],
+            scratch_shapes=[_scratch((1, kpad)), _smem_scalar(),
+                            _smem_scalar(), _smem_scalar(jnp.int32)],
         )
     out = pl.pallas_call(
         kernel,

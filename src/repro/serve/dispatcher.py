@@ -129,14 +129,18 @@ class ServeCluster:
             e.warmup()
 
     def start(self) -> None:
-        if self._started:
-            return
-        self._started = True
-        for i, (eng, q) in enumerate(zip(self.engines, self._queues)):
-            t = threading.Thread(target=self._worker, args=(eng, q),
-                                 name=f"serve-replica-{i}", daemon=True)
-            t.start()
-            self._threads.append(t)
+        # under _cv: a concurrent start() must not double-launch
+        # workers, and close() reads _started/_threads under the same
+        # lock to decide which queues to drain
+        with self._cv:
+            if self._started:
+                return
+            self._started = True
+            for i, (eng, q) in enumerate(zip(self.engines, self._queues)):
+                t = threading.Thread(target=self._worker, args=(eng, q),
+                                     name=f"serve-replica-{i}", daemon=True)
+                t.start()
+                self._threads.append(t)
 
     def close(self) -> None:
         """Close admission.  Requests already routed but sitting in a
@@ -162,10 +166,15 @@ class ServeCluster:
             self.telemetry.requests.finish(rid, "cancel")
 
     def join(self, timeout: Optional[float] = None) -> None:
-        for t in self._threads:
+        # snapshot under the lock, join outside it — a worker dying
+        # mid-join needs _cv to report its error
+        with self._cv:
+            threads = list(self._threads)
+        for t in threads:
             t.join(timeout)
-        if self._errors:
-            raise self._errors[0]
+        with self._cv:
+            if self._errors:
+                raise self._errors[0]
 
     def __enter__(self) -> "ServeCluster":
         self.start()

@@ -118,6 +118,14 @@ class _EngineMetrics:
         self.latency = LatencyHists(registry, **labels)
 
 
+# positional argnums of (cache, slot_buf) in paged_step /
+# paged_decode_loop — the device state donated (aliased in place)
+# across dispatches.  ``repro.analysis.hotpath_check`` lints traced
+# outputs against THIS list, so the analyzer and the engine cannot
+# drift apart.
+PAGED_DONATE_ARGNUMS = (1, 2)
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     max_batch: int = 8              # decode rows per step
@@ -237,6 +245,12 @@ class _Inflight:
     label: str = ""                       # tracer only: device-span name
 
 
+# analysis: single-writer — an Engine is thread-confined by contract:
+# exactly one thread (the owning ServeCluster worker, or the caller in
+# single-engine use) drives warmup/submit/step/drain_progress after
+# construction.  Cross-thread visibility goes through the internally
+# locked Telemetry registry and the RequestQueue in front of submit();
+# nothing else reads engine state from another thread.
 class Engine:
     """Continuous-batching engine; one tensor-parallel replica.
 
@@ -355,7 +369,7 @@ class Engine:
         # this step's inputs by then, so donation keeps both the overlap
         # and the zero-copy update.  cfg.donate=False exists for
         # backends/benchmarks where the aliasing stall does matter.
-        donate = (1, 2) if cfg.donate else ()
+        donate = PAGED_DONATE_ARGNUMS if cfg.donate else ()
         # sampling runs on device, inside the step: temperature/top_k/
         # seed are Python statics baked into the jit wrapper (the greedy
         # executable carries no RNG at all), so the jit cache keys on

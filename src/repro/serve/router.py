@@ -23,6 +23,7 @@ or already-released rid is a no-op, never a crash.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -41,7 +42,14 @@ class ReplicaRouter:
     """Token-weighted least-loaded routing over the replica grid implied
     by a Topology (pod-major, fast-axis groups inner — the same order
     ``launch.mesh.replica_slices`` emits device slices in, so
-    ``replica_id`` indexes both)."""
+    ``replica_id`` indexes both).
+
+    Thread-safe: every replica's worker thread reports progress and
+    completions while client threads route and read loads, so the load
+    and assignment tables live behind an internal lock — callers need
+    no external synchronization, and each public method is atomic
+    (``route``'s pick-then-charge cannot interleave with a concurrent
+    ``release`` shrinking the load it compared)."""
 
     def __init__(self, topology: Topology, num_pods: int, data_size: int,
                  capacity_tokens: Optional[int] = None,
@@ -71,6 +79,7 @@ class ReplicaRouter:
         if widths:
             self._width.update({rid: max(1, int(w))
                                 for rid, w in widths.items()})
+        self._lock = threading.Lock()
         self._load: Dict[int, int] = {r.replica_id: 0 for r in self.replicas}
         self._assignment: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, weight)
         self._m: Optional[dict] = None
@@ -79,15 +88,18 @@ class ReplicaRouter:
         """Wire routing decisions / per-replica load gauges into a
         :class:`repro.serve.telemetry.MetricsRegistry`.  Optional: with
         no registry attached the router is metrics-free."""
-        self._m = {
-            "routed": registry.counter("router_routed", **labels),
-            "refusals": registry.counter("router_refusals", **labels),
-            "released": registry.counter("router_released", **labels),
-            "progress": registry.counter("router_progress_tokens", **labels),
-            "load": {r.replica_id: registry.gauge(
-                         "router_load_tokens", replica=r.replica_id, **labels)
-                     for r in self.replicas},
-        }
+        with self._lock:
+            self._m = {
+                "routed": registry.counter("router_routed", **labels),
+                "refusals": registry.counter("router_refusals", **labels),
+                "released": registry.counter("router_released", **labels),
+                "progress": registry.counter("router_progress_tokens",
+                                             **labels),
+                "load": {r.replica_id: registry.gauge(
+                             "router_load_tokens", replica=r.replica_id,
+                             **labels)
+                         for r in self.replicas},
+            }
 
     def _sync_load(self, replica_id: int) -> None:
         if self._m is not None:
@@ -112,25 +124,26 @@ class ReplicaRouter:
         saturated (``capacity_tokens`` × width): backpressure, the
         caller should wait for a release and retry.  Re-routing an
         already-assigned rid returns its existing placement."""
-        if rid in self._assignment:
-            return self.replicas[self._assignment[rid][0]]
-        best = min(self.replicas,
-                   key=lambda r: (self._load[r.replica_id]
-                                  / self._width[r.replica_id],
-                                  r.replica_id))
-        load = self._load[best.replica_id]
-        if (self.capacity_tokens is not None and load > 0
-                and load + tokens >
-                self.capacity_tokens * self._width[best.replica_id]):
+        with self._lock:
+            if rid in self._assignment:
+                return self.replicas[self._assignment[rid][0]]
+            best = min(self.replicas,
+                       key=lambda r: (self._load[r.replica_id]
+                                      / self._width[r.replica_id],
+                                      r.replica_id))
+            load = self._load[best.replica_id]
+            if (self.capacity_tokens is not None and load > 0
+                    and load + tokens >
+                    self.capacity_tokens * self._width[best.replica_id]):
+                if self._m is not None:
+                    self._m["refusals"].inc()
+                return None
+            self._assignment[rid] = (best.replica_id, tokens)
+            self._load[best.replica_id] += tokens
             if self._m is not None:
-                self._m["refusals"].inc()
-            return None
-        self._assignment[rid] = (best.replica_id, tokens)
-        self._load[best.replica_id] += tokens
-        if self._m is not None:
-            self._m["routed"].inc()
-            self._sync_load(best.replica_id)
-        return best
+                self._m["routed"].inc()
+                self._sync_load(best.replica_id)
+            return best
 
     def progress(self, rid: int, tokens: int) -> None:
         """Return ``tokens`` of a routed request's weight early — the
@@ -140,39 +153,43 @@ class ReplicaRouter:
         a replica carries decays as it actually does the work instead of
         only at completion.  Clamped to the remaining weight; unknown
         rids are no-ops — same composability contract as ``release``."""
-        entry = self._assignment.get(rid)
-        if entry is None:
-            return
-        replica_id, weight = entry
-        dec = min(weight, max(int(tokens), 0))
-        self._assignment[rid] = (replica_id, weight - dec)
-        self._load[replica_id] -= dec
-        if self._m is not None:
-            self._m["progress"].inc(dec)
-            self._sync_load(replica_id)
+        with self._lock:
+            entry = self._assignment.get(rid)
+            if entry is None:
+                return
+            replica_id, weight = entry
+            dec = min(weight, max(int(tokens), 0))
+            self._assignment[rid] = (replica_id, weight - dec)
+            self._load[replica_id] -= dec
+            if self._m is not None:
+                self._m["progress"].inc(dec)
+                self._sync_load(replica_id)
 
     def release(self, rid: int) -> None:
         """Drop ``rid``'s assignment and return its weight to the
         replica.  Idempotent: unknown or already-released rids are
         no-ops, so completion, cancellation, and queue-drain paths can
         all call it without coordinating."""
-        entry = self._assignment.pop(rid, None)
-        if entry is None:
-            return
-        replica_id, weight = entry
-        self._load[replica_id] -= weight
-        if self._m is not None:
-            self._m["released"].inc()
-            self._sync_load(replica_id)
+        with self._lock:
+            entry = self._assignment.pop(rid, None)
+            if entry is None:
+                return
+            replica_id, weight = entry
+            self._load[replica_id] -= weight
+            if self._m is not None:
+                self._m["released"].inc()
+                self._sync_load(replica_id)
 
     def complete(self, rid: int) -> None:
         """A routed request finished; same semantics as ``release``."""
         self.release(rid)
 
     def loads(self) -> Dict[int, int]:
-        """Outstanding routed tokens per replica."""
-        return dict(self._load)
+        """Outstanding routed tokens per replica (a snapshot)."""
+        with self._lock:
+            return dict(self._load)
 
     def outstanding(self) -> int:
         """Requests currently routed and not yet released."""
-        return len(self._assignment)
+        with self._lock:
+            return len(self._assignment)

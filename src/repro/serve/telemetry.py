@@ -487,6 +487,10 @@ class Telemetry:
         self.tracer.write(path)
 
 
+# analysis: single-writer — the controlling thread is the only mutator
+# (_thread/_fh change only in start/stop); the writer thread reads _fh
+# strictly between start()'s Thread() launch and stop()'s join(), both
+# of which fence the hand-off, and watches only the _stop Event.
 class JsonlMetricsWriter:
     """Background thread appending ``registry.snapshot()`` as one JSON
     object per line every ``interval_s`` (plus a final snapshot at

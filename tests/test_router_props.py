@@ -1,79 +1,165 @@
-"""Hypothesis property tests for the serving router's bookkeeping
+"""Property and stress tests for the serving router's bookkeeping
 contract: any interleaving of route/progress/complete/release over
 colliding rids keeps loads non-negative, keeps the load sum equal to
 the outstanding routed weight (progress decays it in quanta, clamped at
-zero), and never throws.  (A seeded random-walk fallback runs in
-test_serve.py when hypothesis is absent.)"""
+zero), and never throws.  The hypothesis tests fuzz single-threaded op
+orders (a seeded random-walk fallback runs in test_serve.py when
+hypothesis is absent); the threaded stress test hammers the same
+contract from concurrent workers — the regression for the lock the
+static concurrency pass (SC rules) demanded."""
+import threading
+
 import pytest
-pytest.importorskip("hypothesis")  # degrade to skips, not a crash
-from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import Topology
 from repro.serve import ReplicaRouter
 
-OPS = st.lists(
-    st.tuples(st.sampled_from(["route", "progress", "complete", "release"]),
-              st.integers(0, 7),           # rid: small range forces reuse
-              st.integers(1, 99)),         # token weight / progress quantum
-    max_size=60)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
-@settings(max_examples=80, deadline=None)
-@given(ops=OPS, num_pods=st.sampled_from([1, 2]),
-       group=st.sampled_from([1, 2, 4]))
-def test_router_invariants_under_any_op_order(ops, num_pods, group):
-    router = ReplicaRouter(Topology(intra_group_size=group),
-                           num_pods=num_pods, data_size=4)
-    outstanding = {}
-    for op, rid, w in ops:
-        if op == "route":
-            assert router.route(rid, tokens=w) is not None
-            outstanding.setdefault(rid, w)   # re-route keeps old weight
-        elif op == "progress":
-            router.progress(rid, w)
-            if rid in outstanding:
-                outstanding[rid] = max(0, outstanding[rid] - w)
-        elif op == "complete":
-            router.complete(rid)
-            outstanding.pop(rid, None)
-        else:
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.tuples(
+            st.sampled_from(["route", "progress", "complete", "release"]),
+            st.integers(0, 7),           # rid: small range forces reuse
+            st.integers(1, 99)),         # token weight / progress quantum
+        max_size=60)
+
+    @settings(max_examples=80, deadline=None)
+    @given(ops=OPS, num_pods=st.sampled_from([1, 2]),
+           group=st.sampled_from([1, 2, 4]))
+    def test_router_invariants_under_any_op_order(ops, num_pods, group):
+        router = ReplicaRouter(Topology(intra_group_size=group),
+                               num_pods=num_pods, data_size=4)
+        outstanding = {}
+        for op, rid, w in ops:
+            if op == "route":
+                assert router.route(rid, tokens=w) is not None
+                outstanding.setdefault(rid, w)  # re-route keeps old weight
+            elif op == "progress":
+                router.progress(rid, w)
+                if rid in outstanding:
+                    outstanding[rid] = max(0, outstanding[rid] - w)
+            elif op == "complete":
+                router.complete(rid)
+                outstanding.pop(rid, None)
+            else:
+                router.release(rid)
+                outstanding.pop(rid, None)
+            loads = router.loads()
+            assert all(v >= 0 for v in loads.values())
+            assert sum(loads.values()) == sum(outstanding.values())
+            assert router.outstanding() == len(outstanding)
+        for rid in list(outstanding):
             router.release(rid)
-            outstanding.pop(rid, None)
-        loads = router.loads()
-        assert all(v >= 0 for v in loads.values())
-        assert sum(loads.values()) == sum(outstanding.values())
-        assert router.outstanding() == len(outstanding)
-    for rid in list(outstanding):
+        assert sum(router.loads().values()) == 0
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=OPS, capacity=st.integers(1, 120))
+    def test_router_backpressure_never_loses_weight(ops, capacity):
+        """With a capacity the router may REFUSE a route (None); a
+        refusal must leave the books untouched, an idle replica must
+        always accept, and accepted weight still balances exactly."""
+        router = ReplicaRouter(Topology(), num_pods=2, data_size=2,
+                               capacity_tokens=capacity)
+        outstanding = {}
+        for op, rid, w in ops:
+            if op == "route":
+                before = dict(router.loads())
+                rep = router.route(rid, tokens=w)
+                if rep is None:
+                    assert rid not in outstanding
+                    assert router.loads() == before  # refusal: no change
+                    assert all(v > 0 for v in before.values())
+                else:
+                    outstanding.setdefault(rid, w)
+            elif op == "progress":
+                router.progress(rid, w)
+                if rid in outstanding:
+                    outstanding[rid] = max(0, outstanding[rid] - w)
+            else:
+                getattr(router, op)(rid)
+                outstanding.pop(rid, None)
+            loads = router.loads()
+            assert all(v >= 0 for v in loads.values())
+            assert sum(loads.values()) == sum(outstanding.values())
+
+
+def test_router_threaded_stress():
+    """Concurrent route→progress→release from many threads must keep
+    the books exact: the pre-lock router lost tokens to read-modify-
+    write races on ``_load``/``_assignment`` under exactly this load
+    (dispatcher workers report progress while clients route), which
+    showed up as permanently inflated replica load and, with
+    ``capacity_tokens``, spurious backpressure."""
+    router = ReplicaRouter(Topology(intra_group_size=2), num_pods=2,
+                           data_size=4)
+    n_threads, per_thread, weight = 8, 200, 7
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def client(tid):
+        try:
+            barrier.wait()
+            for i in range(per_thread):
+                rid = tid * per_thread + i
+                assert router.route(rid, tokens=weight) is not None
+                router.progress(rid, 3)          # partial, then full release
+                snap = router.loads()            # torn reads crash/mismatch
+                assert all(v >= 0 for v in snap.values())
+                router.release(rid)
+                router.release(rid)              # idempotent under racing
+        except BaseException as e:               # surface into the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errors, errors
+    assert sum(router.loads().values()) == 0
+    assert router.outstanding() == 0
+
+
+def test_router_threaded_progress_vs_release():
+    """Dedicated writer threads racing progress against release on the
+    SAME rids: whatever interleaving wins, weight can never go negative
+    and a fully released book sums to zero."""
+    router = ReplicaRouter(Topology(), num_pods=1, data_size=2)
+    rids = list(range(32))
+    for rid in rids:
+        assert router.route(rid, tokens=100) is not None
+    barrier = threading.Barrier(3)
+    errors = []
+
+    def run(fn):
+        try:
+            barrier.wait()
+            for _ in range(50):
+                for rid in rids:
+                    fn(rid)
+                    snap = router.loads()
+                    assert all(v >= 0 for v in snap.values())
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=run, args=(lambda r: router.progress(r, 1),)),
+        threading.Thread(target=run, args=(router.release,)),
+        threading.Thread(target=run, args=(router.complete,)),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errors, errors
+    for rid in rids:
         router.release(rid)
     assert sum(router.loads().values()) == 0
-
-
-@settings(max_examples=60, deadline=None)
-@given(ops=OPS, capacity=st.integers(1, 120))
-def test_router_backpressure_never_loses_weight(ops, capacity):
-    """With a capacity the router may REFUSE a route (None); a refusal
-    must leave the books untouched, an idle replica must always accept,
-    and accepted weight still balances exactly."""
-    router = ReplicaRouter(Topology(), num_pods=2, data_size=2,
-                           capacity_tokens=capacity)
-    outstanding = {}
-    for op, rid, w in ops:
-        if op == "route":
-            before = dict(router.loads())
-            rep = router.route(rid, tokens=w)
-            if rep is None:
-                assert rid not in outstanding
-                assert router.loads() == before      # refusal: no change
-                assert all(v > 0 for v in before.values())
-            else:
-                outstanding.setdefault(rid, w)
-        elif op == "progress":
-            router.progress(rid, w)
-            if rid in outstanding:
-                outstanding[rid] = max(0, outstanding[rid] - w)
-        else:
-            getattr(router, op)(rid)
-            outstanding.pop(rid, None)
-        loads = router.loads()
-        assert all(v >= 0 for v in loads.values())
-        assert sum(loads.values()) == sum(outstanding.values())
+    assert router.outstanding() == 0
