@@ -24,8 +24,8 @@ import numpy as np
 
 from repro.configs.base import get_config, smoke_variant
 from repro.models.model import build_model
-from repro.serve import (Engine, EngineConfig, Request, RequestQueue,
-                         ServeCluster, Telemetry)
+from repro.serve import (Engine, EngineConfig, FaultPlan, Request,
+                         RequestQueue, ServeCluster, Telemetry)
 
 
 def _print_metrics(snapshot):
@@ -63,6 +63,18 @@ def main():
                     "tokens)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas, one per device slice")
+    ap.add_argument("--chaos-kill", default=None, metavar="R:K",
+                    help="inject a replica kill at replica R's K-th "
+                    "dispatch (needs --replicas >= 2): the dispatcher "
+                    "detects the death, reclaims the replica's "
+                    "in-flight requests, and re-decodes them on the "
+                    "survivors — same tokens, fold_in(rid, position) "
+                    "keys make re-decode replica-independent")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request end-to-end deadline budget in "
+                    "seconds; overrunning requests finish with a "
+                    "'deadline' fault result instead of blocking the "
+                    "batch")
     ap.add_argument("--metrics", action="store_true",
                     help="print the telemetry snapshot table on exit "
                     "(counters, gauges, TTFT/TPOT/e2e percentiles)")
@@ -87,10 +99,17 @@ def main():
         ecfg, num_blocks=(ecfg.max_batch + ecfg.admission_lookahead)
         * ecfg.blocks_per_seq + 1)
     telemetry = Telemetry(trace=args.trace is not None)
+    plan = None
+    if args.chaos_kill is not None:
+        if args.replicas < 2:
+            ap.error("--chaos-kill needs --replicas >= 2 (a survivor "
+                     "must exist to fail over to)")
+        rep, k = (int(x) for x in args.chaos_kill.split(":"))
+        plan = FaultPlan.kill_at(replica=rep, dispatch=k)
     if args.replicas > 1:
         server = ServeCluster.for_replicas(model, params, ecfg,
                                            num_replicas=args.replicas,
-                                           telemetry=telemetry)
+                                           telemetry=telemetry, faults=plan)
     else:
         server = Engine(model, params, ecfg, telemetry=telemetry)
     server.warmup()
@@ -108,7 +127,7 @@ def main():
             g = int(rng.integers(args.gen_len // 4, args.gen_len + 1))
             queue.submit(Request(
                 prompt=rng.integers(0, cfg.vocab_size, (p,)),
-                max_new_tokens=g))
+                max_new_tokens=g, deadline_s=args.deadline))
             time.sleep(0.002)
         queue.close()
 
@@ -122,9 +141,11 @@ def main():
 
     for rid in sorted(results):
         r = results[rid]
+        tag = f"  FAULT={r.fault}" if r.fault else ""
         print(f"  req {rid}: prompt={r.prompt_len:3d} gen={len(r.tokens):3d}"
               f"  first-token={(r.first_token_time - t0)*1e3:6.1f} ms"
-              f"  tokens={r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}")
+              f"  tokens={r.tokens[:8]}{'...' if len(r.tokens) > 8 else ''}"
+              f"{tag}")
     tokens = sum(len(r.tokens) for r in results.values())
     if args.replicas > 1:
         m = server.metrics()
@@ -141,6 +162,10 @@ def main():
     print(f"{tokens} tokens in {wall*1e3:.0f} ms "
           f"({tokens / wall:,.0f} tok/s), decode occupancy {occ:.2f}, "
           f"{stats['preemptions']} preemptions{per_rep}")
+    if plan is not None:
+        fo = server.metrics()["failover"]
+        print(f"  chaos: fired={[(a.replica, a.dispatch, a.kind) for a in plan.fired()]}  "
+              f"failovers={fo['failovers']} redispatched={fo['redispatched']}")
     if args.metrics:
         _print_metrics(telemetry.registry.snapshot())
     if args.trace:

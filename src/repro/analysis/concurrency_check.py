@@ -10,8 +10,10 @@ tracer can catch them.  This pass does, purely from the AST:
      one of its own methods (``threading.Thread(target=self._worker)``);
   2. mark the state reachable from both sides as *shared*: the root
      class itself, plus (one hop) every class its ``__init__``
-     constructs and every class named in a worker entry's parameter
-     annotations.  The hop limit is deliberate: objects two hops out
+     constructs and every class named in a worker entry's or
+     ``__init__``'s parameter annotations — including names nested in
+     subscripts (``Optional[FaultPlan]``) or string annotations.  The
+     hop limit is deliberate: objects two hops out
      (e.g. the metric handles inside the telemetry registry) are
      reached only through internally-locked intermediaries, and lint
      findings on them would be noise — the limit is documented here so
@@ -46,6 +48,7 @@ from __future__ import annotations
 
 import ast
 import os
+import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -240,24 +243,43 @@ def _scan_class(node: ast.ClassDef, fname: str,
     return info
 
 
-def _entry_annotation_refs(info: _ClassInfo,
-                           class_names: Set[str]) -> Set[str]:
-    """Class names from worker-entry parameter annotations — the
-    objects the launcher hands its worker thread."""
+def _annotation_names(ann: Optional[ast.AST],
+                      class_names: Set[str]) -> Set[str]:
+    """Every known class name mentioned anywhere in an annotation AST —
+    including inside subscripts (``Optional[FaultPlan]``,
+    ``Dict[int, Engine]``) and string annotations (``"FaultPlan"``,
+    ``"Optional[FaultPlan]"``), which earlier versions of this pass
+    missed: a worker-shared object behind ``Optional[...]`` silently
+    escaped the shared set."""
     out: Set[str] = set()
-    for name in info.worker_entries:
+    if ann is None:
+        return out
+    for sub in ast.walk(ann):
+        if isinstance(sub, ast.Name) and sub.id in class_names:
+            out.add(sub.id)
+        elif isinstance(sub, ast.Attribute) and sub.attr in class_names:
+            out.add(sub.attr)
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            for word in re.findall(r"[A-Za-z_][A-Za-z0-9_]*", sub.value):
+                if word in class_names:
+                    out.add(word)
+    return out
+
+
+def _param_annotation_refs(info: _ClassInfo, class_names: Set[str],
+                           method_names: Set[str]) -> Set[str]:
+    """Class names from the parameter annotations of ``method_names`` —
+    worker entries (the objects the launcher hands its thread) and
+    ``__init__`` (the collaborators the root holds for its lifetime;
+    their mutable state is reachable from every thread the root
+    launches)."""
+    out: Set[str] = set()
+    for name in method_names:
         meth = info.methods.get(name)
         if meth is None:
             continue
         for arg in meth.args.args + meth.args.kwonlyargs:
-            ann = arg.annotation
-            if isinstance(ann, ast.Name) and ann.id in class_names:
-                out.add(ann.id)
-            elif isinstance(ann, ast.Constant) \
-                    and ann.value in class_names:
-                out.add(ann.value)
-            elif isinstance(ann, ast.Attribute) and ann.attr in class_names:
-                out.add(ann.attr)
+            out |= _annotation_names(arg.annotation, class_names)
     return out
 
 
@@ -376,7 +398,8 @@ def run(root: Optional[str] = None) -> List[Finding]:
         if info.single_writer:
             continue  # the claim covers everything it hands its worker
         shared |= info.refs
-        shared |= _entry_annotation_refs(info, class_names)
+        shared |= _param_annotation_refs(
+            info, class_names, info.worker_entries | {"__init__"})
 
     findings: List[Finding] = []
     for name in sorted(shared):

@@ -18,9 +18,15 @@ model interface (Model.init_paged_cache / Model.paged_step).
                        labels), per-request lifecycle tracing (TTFT /
                        TPOT / e2e histograms), Chrome-trace span
                        timelines, JSONL snapshot export
+  faults               replica lifecycle states, health/retry policy,
+                       deterministic chaos-injection plans (the
+                       dispatcher's fault-tolerance knobs)
 """
 from repro.serve.dispatcher import ServeCluster
 from repro.serve.engine import Engine, EngineConfig, RequestResult
+from repro.serve.faults import (FaultAction, FaultInjected, FaultPlan,
+                                HealthConfig, NoLiveReplicas, Overloaded,
+                                ReplicaKilled, ReplicaState, RetryPolicy)
 from repro.serve.kv_cache import (BlockAllocator, PagedKVCache,
                                   StateSlotAllocator)
 from repro.serve.router import Replica, ReplicaRouter
@@ -31,9 +37,12 @@ from repro.serve.telemetry import (Counter, Gauge, Histogram,
                                    TraceBook)
 
 __all__ = [
-    "BlockAllocator", "Counter", "Engine", "EngineConfig", "Gauge",
-    "Histogram", "JsonlMetricsWriter", "LatencyHists", "MetricsRegistry",
-    "PagedKVCache", "Replica", "ReplicaRouter", "Request", "RequestQueue",
-    "RequestResult", "Scheduler", "ServeCluster", "SpanTracer",
-    "StateSlotAllocator", "Telemetry", "TraceBook",
+    "BlockAllocator", "Counter", "Engine", "EngineConfig", "FaultAction",
+    "FaultInjected", "FaultPlan", "Gauge", "HealthConfig", "Histogram",
+    "JsonlMetricsWriter", "LatencyHists", "MetricsRegistry",
+    "NoLiveReplicas", "Overloaded", "PagedKVCache", "Replica",
+    "ReplicaKilled", "ReplicaRouter", "ReplicaState", "Request",
+    "RequestQueue", "RequestResult", "RetryPolicy", "Scheduler",
+    "ServeCluster", "SpanTracer", "StateSlotAllocator", "Telemetry",
+    "TraceBook",
 ]

@@ -80,7 +80,7 @@ from repro.serve.telemetry import LatencyHists, MetricsRegistry, Telemetry
 # engine's replica/arch
 _STAT_KEYS = ("steps", "decode_steps", "decode_slot_steps",
               "decode_active_slot_steps", "prefill_tokens",
-              "generated_tokens", "preemptions", "model_calls",
+              "generated_tokens", "preemptions", "faulted", "model_calls",
               "host_syncs", "loop_dispatches", "loop_truncations")
 
 _DISPATCH_PHASES = ("prefill", "decode", "mixed", "loop")
@@ -206,6 +206,10 @@ class RequestResult:
     first_token_time: float = 0.0
     finish_time: float = 0.0
     preempted: int = 0
+    # non-None marks a FAULT terminal ("deadline", "poison",
+    # "no_live_replicas"): the request did not finish; ``tokens`` holds
+    # whatever partial output had materialized
+    fault: Optional[str] = None
 
 
 @dataclass(eq=False)        # identity equality (held in ordered lists)
@@ -421,6 +425,9 @@ class Engine:
         # dispatcher turns these into router progress (load accounting
         # in N-token quanta)
         self._progress_tokens: Dict[int, int] = {}
+        # deadline policing is pay-for-use: the per-step expiry sweep
+        # only runs once a request with a budget has been submitted
+        self._has_deadlines = False
         # jit-compile watermark: sum of the jitted wrappers' cache sizes
         # last time we looked.  Any growth mid-serving is a compile the
         # warmup missed (the PR-5 recompile bug, now a permanent metric
@@ -511,6 +518,11 @@ class Engine:
         # first-wins no-op when the dispatcher already stamped it at the
         # cluster front door
         self.telemetry.requests.stamp(req.rid, "submit")
+        # arm deadline budgets (first caller wins: re-dispatch after a
+        # replica death carries the ORIGINAL absolute instants)
+        req.start_clock()
+        if req.deadline_at is not None or req.queue_deadline_at is not None:
+            self._has_deadlines = True
         self.scheduler.add(req)
 
     # -- internals ----------------------------------------------------------
@@ -541,6 +553,10 @@ class Engine:
                                    "free token-buffer slot (engine bug)")
             self._m.state_slots_free.set(self.state_slots.num_free)
         self._live.append(seq)
+        # first admission retires the queue-wait budget: the queue
+        # deadline bounds time-to-first-slot, not recompute churn after
+        # a preemption sends the request back to the waiting line
+        req.queue_deadline_at = None
         # first-wins: a preempted request's re-admit keeps its original
         # admit stamp, so queue-wait stays submit -> first admission
         self.telemetry.requests.stamp(req.rid, "admit")
@@ -610,6 +626,132 @@ class Engine:
             self._preempt_seq(victim)
             return True
         return False
+
+    # -- fault terminals / deadline enforcement -----------------------------
+
+    def _fault_result(self, req: Request, reason: str, out: Sequence[int],
+                      first_token_time: float = 0.0,
+                      finished: Optional[List[RequestResult]] = None
+                      ) -> RequestResult:
+        """Terminal a request with a FAULT verdict (deadline blown,
+        poison quarantine, ...): stitch whatever partial output
+        materialized (recompute-prompt suffix + host tokens), stamp the
+        ``fault`` lifecycle terminal, and count it."""
+        regen = list(req.prompt[req.orig_prompt_len:])
+        res = RequestResult(
+            rid=req.rid, prompt_len=req.orig_prompt_len,
+            tokens=regen + list(out), arrival_time=req.arrival_time,
+            first_token_time=first_token_time,
+            finish_time=time.perf_counter(),
+            preempted=self._preempt_counts.pop(req.rid, 0), fault=reason)
+        self._m.faulted.inc()
+        self.telemetry.requests.finish(
+            req.rid, "fault", tokens=len(res.tokens),
+            replica=self.replica_id)
+        if finished is not None:
+            finished.append(res)
+        return res
+
+    def _evict_fault(self, seq: _Seq, reason: str,
+                     finished: List[RequestResult]) -> None:
+        """``_evict``'s teardown with a fault verdict instead of a
+        completion.  Caller must have flushed in-flight steps first
+        (``seq.out`` must be host-complete)."""
+        assert not self._pending
+        self._live.remove(seq)
+        self._free_slots.append(seq.slot)
+        self.kv.free_seq(seq.req.rid)
+        if self.state_slots is not None:
+            self.state_slots.free_if_held(seq.req.rid)
+        self.scheduler.forget(seq.req)
+        self._first_token_times.pop(seq.req.rid, None)
+        self._fault_result(seq.req, reason, seq.out,
+                           first_token_time=seq.first_token_time,
+                           finished=finished)
+        self._m.live_seqs.set(len(self._live))
+        if self.state_slots is not None:
+            self._m.state_slots_free.set(self.state_slots.num_free)
+
+    def _expire_deadlines(self, finished: List[RequestResult]) -> None:
+        """Enforce queue-wait and e2e budgets at the dispatch boundary.
+        Waiting-line expiry is cheap (no device state to unwind); a live
+        sequence past its e2e deadline is flushed first so its partial
+        output lands in the fault result."""
+        mono = time.monotonic()
+        for req in self.scheduler.expire(mono):
+            # a refused first-chunk admission can leave an empty table
+            self.kv.free_seq(req.rid)
+            reason = ("queue_deadline"
+                      if req.queue_deadline_at is not None
+                      and mono > req.queue_deadline_at else "deadline")
+            self._fault_result(req, reason, (), finished=finished)
+        expired = [s for s in self._live
+                   if not s.done and s.req.deadline_at is not None
+                   and mono > s.req.deadline_at]
+        if expired:
+            self._flush(finished)
+            for seq in expired:
+                if seq in self._live and not seq.done:
+                    self._evict_fault(seq, "deadline", finished)
+
+    # -- post-mortem reclaim ------------------------------------------------
+
+    def reclaim_requests(self) -> Tuple[List[Request], List[RequestResult]]:
+        """Empty this engine and hand every request back for re-dispatch
+        elsewhere — the failover path after this replica's worker died.
+
+        MUST only be called once the owning thread has stopped driving
+        the engine (the worker's exception handler, post-exit): the
+        engine is thread-confined and this walks all of its state.
+
+        In-flight dispatches are abandoned unfetched — their token
+        values are lost, but sampling keys are ``fold_in(rid, position)``
+        so a recompute re-dispatch regenerates them bit-identically.
+        Each live sequence's host-materialized tokens fold into its
+        prompt (recompute mode, same as preemption); sequences that
+        already finished (eos on host, or budget exhausted) return as
+        completed results instead of re-dispatch work.  Returns
+        ``(requests_to_redispatch, finished_results)``."""
+        requests: List[Request] = []
+        finished: List[RequestResult] = []
+        self._pending.clear()
+        self._desynced.clear()
+        now = time.perf_counter()
+        for seq in list(self._live):
+            req, out = seq.req, list(seq.out)
+            if req.eos_id is not None and req.eos_id in out:
+                out = out[:out.index(req.eos_id) + 1]
+            remaining = req.max_new_tokens - len(out)
+            regen = list(req.prompt[req.orig_prompt_len:])
+            if (req.eos_id is not None and req.eos_id in out) \
+                    or remaining <= 0:
+                finished.append(RequestResult(
+                    rid=req.rid, prompt_len=req.orig_prompt_len,
+                    tokens=regen + out, arrival_time=req.arrival_time,
+                    first_token_time=seq.first_token_time, finish_time=now,
+                    preempted=self._preempt_counts.pop(req.rid, 0)))
+                self.telemetry.requests.finish(
+                    req.rid, "complete", tokens=len(regen) + len(out),
+                    replica=self.replica_id, hists=self._m.latency)
+                continue
+            # recompute fold, exactly like preemption: position-stable
+            # keys make the continuation replica-independent
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(out, np.int32)])
+            req.max_new_tokens = remaining
+            requests.append(req)
+        requests.extend(self.scheduler.reset())
+        self._live = []
+        self._pending.clear()
+        self.kv.release_all()
+        if self.state_slots is not None:
+            self.state_slots.release_all()
+            self._m.state_slots_free.set(self.state_slots.num_free)
+        self._free_slots = list(range(self.cfg.num_slots - 1, -1, -1))
+        self._first_token_times.clear()
+        self._progress_tokens.clear()
+        self._m.live_seqs.set(0)
+        return requests, finished
 
     # -- in-flight bookkeeping ----------------------------------------------
 
@@ -1190,6 +1332,8 @@ class Engine:
         """One engine iteration; returns requests finished this step."""
         now = time.perf_counter() if now is None else now
         finished: List[RequestResult] = []
+        if self._has_deadlines:
+            self._expire_deadlines(finished)
         if self.cfg.fused:
             self._step_fused(now, finished)
         else:

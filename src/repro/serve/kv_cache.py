@@ -123,6 +123,12 @@ class StateSlotAllocator:
         if rid in self._owner:
             self.free(rid)
 
+    def release_all(self) -> None:
+        """Free every held slot (post-mortem reclaim: the owning engine
+        is being emptied after its worker died)."""
+        for rid in list(self._owner):
+            self.free(rid)
+
 
 class PagedKVCache:
     """Block tables for live sequences + the allocator behind them.
@@ -258,6 +264,14 @@ class PagedKVCache:
             if live:
                 self.allocator.free(live)
         self._sync_free()
+
+    def release_all(self) -> None:
+        """Free every sequence's blocks (release-on-death: a dead
+        replica's engine must hand its whole pool back before its
+        requests fail over, so a respawned worker on the same engine
+        starts from a clean allocator).  Idempotent."""
+        for rid in list(self._tables):
+            self.free_seq(rid)
 
     def num_blocks_of(self, rid: int) -> int:
         """Pool blocks ``rid`` actually holds (reclaimed window

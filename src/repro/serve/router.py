@@ -82,6 +82,7 @@ class ReplicaRouter:
         self._lock = threading.Lock()
         self._load: Dict[int, int] = {r.replica_id: 0 for r in self.replicas}
         self._assignment: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, weight)
+        self._disabled: set = set()       # replicas not accepting routes
         self._m: Optional[dict] = None
 
     def attach_metrics(self, registry, **labels) -> None:
@@ -114,20 +115,47 @@ class ReplicaRouter:
         engine serves at)."""
         return self._width[replica_id]
 
+    def disable(self, replica_id: int) -> None:
+        """Take ``replica_id`` out of the routing pool (DRAINING/DEAD):
+        new routes skip it.  Existing assignments are untouched — the
+        failover path releases and re-routes them explicitly, so load
+        accounting never jumps behind the dispatcher's back."""
+        with self._lock:
+            self._disabled.add(replica_id)
+
+    def enable(self, replica_id: int) -> None:
+        """Return ``replica_id`` to the routing pool (respawn after a
+        clean drain).  Idempotent, like ``disable``."""
+        with self._lock:
+            self._disabled.discard(replica_id)
+
+    def enabled_count(self) -> int:
+        """Replicas currently accepting new routes."""
+        with self._lock:
+            return len(self.replicas) - len(self._disabled)
+
     def route(self, rid: int, tokens: int = 1) -> Optional[Replica]:
-        """Assign request ``rid`` to the replica with the fewest
+        """Assign request ``rid`` to the enabled replica with the fewest
         outstanding tokens *per slice device* (lowest id on ties, so
         placement is deterministic) — a width-4 TP replica with 40
         outstanding tokens is as loaded as a width-1 replica with 10.
         ``tokens`` is the request's weight — its outstanding
-        prompt+decode tokens.  Returns None when every replica is
-        saturated (``capacity_tokens`` × width): backpressure, the
-        caller should wait for a release and retry.  Re-routing an
-        already-assigned rid returns its existing placement."""
+        prompt+decode tokens.  Returns None when every enabled replica
+        is saturated (``capacity_tokens`` × width) or every replica is
+        disabled: backpressure, the caller should wait for a release
+        (or a respawn) and retry.  Re-routing an already-assigned rid
+        returns its existing placement even on a disabled replica — the
+        caller owns the release-then-re-route ordering."""
         with self._lock:
             if rid in self._assignment:
                 return self.replicas[self._assignment[rid][0]]
-            best = min(self.replicas,
+            candidates = [r for r in self.replicas
+                          if r.replica_id not in self._disabled]
+            if not candidates:
+                if self._m is not None:
+                    self._m["refusals"].inc()
+                return None
+            best = min(candidates,
                        key=lambda r: (self._load[r.replica_id]
                                       / self._width[r.replica_id],
                                       r.replica_id))

@@ -37,12 +37,21 @@ _RID = itertools.count()
 @dataclass(eq=False)        # identity equality: prompt is an ndarray
 class Request:
     """One generation request.  ``prompt`` is a 1-D int32 token array
-    (tokenization happens host-side, overlapped with device decode)."""
+    (tokenization happens host-side, overlapped with device decode).
+
+    Deadlines are *budgets* (seconds, relative): ``queue_deadline_s``
+    bounds the wait until FIRST admission to an engine slot,
+    ``deadline_s`` bounds submit-to-last-token.  ``start_clock`` arms
+    them once into absolute ``time.monotonic`` instants; the absolute
+    instants — not the budgets — are what failover re-dispatch carries
+    across replicas, so dying replicas never extend a deadline."""
     prompt: np.ndarray
     max_new_tokens: int
     rid: int = field(default_factory=lambda: next(_RID))
     arrival_time: float = 0.0
     eos_id: Optional[int] = None
+    deadline_s: Optional[float] = None        # e2e budget, submit->done
+    queue_deadline_s: Optional[float] = None  # wait budget, submit->admit
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -53,6 +62,19 @@ class Request:
         # preemption folds generated tokens into the prompt (recompute
         # mode); this remembers where the user's prompt actually ended
         self.orig_prompt_len = int(self.prompt.size)
+        self.deadline_at: Optional[float] = None
+        self.queue_deadline_at: Optional[float] = None
+
+    def start_clock(self, now: Optional[float] = None) -> None:
+        """Arm the absolute deadlines (first caller wins — the budgets
+        count from first submission and survive re-dispatch)."""
+        if now is None:
+            now = time.monotonic()
+        if self.deadline_s is not None and self.deadline_at is None:
+            self.deadline_at = now + self.deadline_s
+        if self.queue_deadline_s is not None \
+                and self.queue_deadline_at is None:
+            self.queue_deadline_at = now + self.queue_deadline_s
 
 
 class RequestQueue:
@@ -89,6 +111,10 @@ class RequestQueue:
     @property
     def closed(self) -> bool:
         return self._closed.is_set()
+
+    @property
+    def empty(self) -> bool:
+        return self._q.empty()
 
     @property
     def exhausted(self) -> bool:
@@ -224,7 +250,40 @@ class Scheduler:
         return req
 
     def forget(self, req: Request) -> None:
+        """Drop ``req``'s admission bookkeeping (prefill progress and,
+        if mid-prompt, its place in the prefilling line) — eviction for
+        any terminal reason, not just completion."""
         self._progress.pop(req.rid, None)
+        self.prefilling = [r for r in self.prefilling if r.rid != req.rid]
+
+    def expire(self, now: float) -> List[Request]:
+        """Remove and return waiting-line requests whose queue-wait or
+        e2e deadline has passed.  Only the *never-admitted* wait is
+        policed here: a preempted request re-enters this line but its
+        ``queue_deadline_at`` was cleared at first admission (the queue
+        budget bounds time-to-first-slot, not recompute churn); its e2e
+        deadline still applies."""
+        expired = [r for r in self.waiting
+                   if (r.queue_deadline_at is not None
+                       and now > r.queue_deadline_at)
+                   or (r.deadline_at is not None and now > r.deadline_at)]
+        if expired:
+            gone = {r.rid for r in expired}
+            self.waiting = deque(r for r in self.waiting
+                                 if r.rid not in gone)
+            for r in expired:
+                self._progress.pop(r.rid, None)
+        return expired
+
+    def reset(self) -> List[Request]:
+        """Drop ALL scheduler state and return the requests that were
+        waiting (incl. mid-prefill admissions the engine evicts
+        separately) — the post-mortem reclaim path."""
+        out = list(self.waiting)
+        self.waiting.clear()
+        self.prefilling = []
+        self._progress.clear()
+        return out
 
     def planned(self, req: Request) -> bool:
         """Whether ``req`` still has prefill progress on the books — False

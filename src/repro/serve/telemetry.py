@@ -256,24 +256,27 @@ class MetricsRegistry:
 # ---------------------------------------------------------------------------
 
 # single-stamp events (first stamp wins — a preempted request's re-admit
-# must not move its queue-wait) and the two terminal kinds
+# must not move its queue-wait), the repeatable ``retry`` mark, and the
+# three terminal kinds.  ``fault`` is the failure terminal: deadline
+# blown, poison quarantine, or no live replica left to serve on.
 LIFECYCLE_EVENTS = ("submit", "route", "admit", "prefill_start",
-                    "first_token", "complete", "cancel")
-TERMINAL_EVENTS = ("complete", "cancel")
+                    "first_token", "retry", "complete", "cancel", "fault")
+TERMINAL_EVENTS = ("complete", "cancel", "fault")
 
 
 class RequestTrace:
     """One request's lifecycle record: single-stamp event timestamps
     plus repeatable preempt/dispatch counts."""
 
-    __slots__ = ("rid", "stamps", "preemptions", "dispatches", "tokens",
-                 "replica", "terminal")
+    __slots__ = ("rid", "stamps", "preemptions", "dispatches", "retries",
+                 "tokens", "replica", "terminal")
 
     def __init__(self, rid: int):
         self.rid = rid
         self.stamps: Dict[str, float] = {}
         self.preemptions = 0
         self.dispatches = 0
+        self.retries = 0
         self.tokens = 0
         self.replica: Optional[int] = None
         self.terminal: Optional[str] = None
@@ -281,7 +284,8 @@ class RequestTrace:
     def as_dict(self) -> Dict[str, object]:
         return {"rid": self.rid, "stamps": dict(self.stamps),
                 "preemptions": self.preemptions,
-                "dispatches": self.dispatches, "tokens": self.tokens,
+                "dispatches": self.dispatches, "retries": self.retries,
+                "tokens": self.tokens,
                 "replica": self.replica, "terminal": self.terminal}
 
 
@@ -317,6 +321,8 @@ class TraceBook:
         self.double_terminals = registry.counter("trace_double_terminals")
         self._completed = registry.counter("requests_completed")
         self._cancelled = registry.counter("requests_cancelled")
+        self._faulted = registry.counter("requests_faulted")
+        self._retried = registry.counter("requests_retried")
 
     def _trace(self, rid: int) -> RequestTrace:
         got = self._traces.get(rid)
@@ -342,14 +348,32 @@ class TraceBook:
     def note_dispatch(self, rid: int) -> None:
         self._trace(rid).dispatches += 1
 
+    def note_retry(self, rid: int, cause: str = "") -> None:
+        """Failover re-dispatch mark (repeatable): the attempt count on
+        the trace plus a cause-labeled counter — and deliberately NOT a
+        second ``route``/``admit`` stamp.  Single-stamp events keep
+        their first timestamp, so queue-wait and TTFT stay measured
+        from the ORIGINAL admission; a retried request's extra latency
+        shows up where it belongs, in e2e, not as a double-counted
+        TTFT."""
+        tr = self._trace(rid)
+        if tr.terminal is not None:
+            return
+        tr.retries += 1
+        self._retried.inc()
+        if cause:
+            self.registry.counter("requests_retried", cause=cause).inc()
+
     def finish(self, rid: int, kind: str, tokens: int = 0,
                replica: Optional[int] = None,
                hists: Optional[LatencyHists] = None,
                t: Optional[float] = None) -> Optional[RequestTrace]:
-        """Terminal event (``complete`` / ``cancel``): stamp it, derive
-        the latency metrics into ``hists``, and return the trace.  A
-        second terminal for the same rid is refused (returns None) and
-        counted in ``trace_double_terminals``."""
+        """Terminal event (``complete`` / ``cancel`` / ``fault``): stamp
+        it, derive the latency metrics into ``hists``, and return the
+        trace.  A second terminal for the same rid is refused (returns
+        None) and counted in ``trace_double_terminals`` — the invariant
+        failover leans on: a re-dispatched request completes exactly
+        once no matter how many replicas died under it."""
         if kind not in TERMINAL_EVENTS:
             raise ValueError(f"not a terminal event: {kind!r}")
         now = time.perf_counter() if t is None else t
@@ -362,7 +386,8 @@ class TraceBook:
         tr.stamps[kind] = now
         tr.tokens = tokens
         tr.replica = replica
-        (self._completed if kind == "complete" else self._cancelled).inc()
+        {"complete": self._completed, "cancel": self._cancelled,
+         "fault": self._faulted}[kind].inc()
         if hists is not None and kind == "complete":
             submit = tr.stamps.get("submit")
             admit = tr.stamps.get("admit")

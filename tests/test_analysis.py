@@ -383,6 +383,38 @@ def test_sc_propagates_one_hop_to_constructed_helpers(tmp_path):
     assert all("Book.charge" in f.where for f in fs)
 
 
+def test_sc_init_param_annotations_pull_injected_helpers(tmp_path):
+    """A helper the worker-root RECEIVES (rather than constructs) is
+    still shared state: the ``Optional["Plan"]`` string annotation on
+    ``__init__`` must pull Plan into the shared set so its unguarded
+    mutation is flagged — the dispatcher's injected FaultPlan is
+    exactly this shape."""
+    fs = _lint_source(tmp_path, textwrap.dedent("""
+        import threading
+        from typing import Optional
+
+        class Plan:
+            def __init__(self):
+                self.fired = []
+
+            def mark(self, k):
+                self.fired.append(k)         # SC001: no lock
+
+        class Front:
+            def __init__(self, plan: Optional["Plan"] = None):
+                self.plan = plan
+
+            def start(self):
+                threading.Thread(target=self._run, daemon=True).start()
+
+            def _run(self):
+                if self.plan is not None:
+                    self.plan.mark(0)
+    """))
+    assert ("SC001", "fired") in {(f.rule, f.obj) for f in fs}
+    assert any("Plan.mark" in f.where for f in fs)
+
+
 def test_sc_safe_stdlib_types_are_exempt_unless_rebound(tmp_path):
     fs = _lint_source(tmp_path, textwrap.dedent("""
         import queue

@@ -163,3 +163,70 @@ def test_router_threaded_progress_vs_release():
         router.release(rid)
     assert sum(router.loads().values()) == 0
     assert router.outstanding() == 0
+
+
+def test_router_threaded_release_on_death():
+    """The dispatcher's failover sequence — disable the dead replica,
+    release its in-flight rids, re-route them — racing worker threads
+    that report progress on those same rids.  Whatever interleaving
+    wins: re-routes never land on the disabled replica, the dead
+    replica's book drains to exactly zero, release stays idempotent,
+    and the surviving replica's load equals its outstanding weight."""
+    router = ReplicaRouter(Topology(intra_group_size=2), num_pods=1,
+                           data_size=4)                  # replicas 0, 1
+    dead_rids = []
+    weight = 10
+    # pin half the book to replica 0 by saturating round-robin pairs
+    rid = 0
+    while len(dead_rids) < 16:
+        rep = router.route(rid, tokens=weight)
+        assert rep is not None
+        if rep.replica_id == 0:
+            dead_rids.append(rid)
+        rid += 1
+    barrier = threading.Barrier(3)
+    errors = []
+    stop = threading.Event()
+
+    def prog():
+        try:
+            barrier.wait()
+            while not stop.is_set():
+                for r in dead_rids:
+                    router.progress(r, 1)    # late progress from the dead
+                    snap = router.loads()    # replica's last results
+                    assert all(v >= 0 for v in snap.values())
+        except BaseException as e:
+            errors.append(e)
+
+    def failover():
+        try:
+            barrier.wait()
+            router.disable(0)
+            for r in dead_rids:
+                router.release(r)
+                router.release(r)            # idempotent under racing
+            for r in dead_rids:
+                rep = router.route(r, tokens=weight)
+                assert rep is not None and rep.replica_id != 0
+        except BaseException as e:
+            errors.append(e)
+        finally:
+            stop.set()
+
+    threads = [threading.Thread(target=prog),
+               threading.Thread(target=prog),
+               threading.Thread(target=failover)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    assert not errors, errors
+    loads = router.loads()
+    assert loads[0] == 0                     # the dead book fully drained
+    for r in list(range(rid)):
+        router.release(r)
+    assert sum(router.loads().values()) == 0
+    assert router.enabled_count() == 1
+    router.enable(0)
+    assert router.enabled_count() == 2

@@ -1,0 +1,385 @@
+"""Fault-tolerant serving tests: deterministic chaos plans, replica
+death/hang failover, deadlines, poison quarantine, bounded join, and
+the load-bearing equivalence — a request whose replica is killed
+mid-generation still produces the token stream of fault-free
+sequential decode (greedy AND seeded temperature), because the
+engine's ``fold_in(rid, position)`` sampling keys make re-decode
+replica-independent."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, smoke_variant
+from repro.models.model import build_model
+from repro.serve import (Engine, EngineConfig, FaultAction, FaultPlan,
+                         HealthConfig, NoLiveReplicas, Overloaded,
+                         ReplicaState, Request, RetryPolicy, ServeCluster)
+
+from tests.test_serve import _sequential_greedy
+from tests.test_serve_decode_loop import _sequential_sample
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = smoke_variant(get_config("qwen2-1.5b")).replace(
+        mtp_depth=0, num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+        num_heads=2, num_kv_heads=2, head_dim=32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _ecfg(**kw):
+    base = dict(max_batch=3, block_size=8, num_blocks=65, max_seq_len=64,
+                prefill_chunk=16, prefill_token_budget=24)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _workload(cfg, n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, (int(p),)), int(g))
+            for p, g in zip(rng.integers(3, 40, n), rng.integers(4, 16, n))]
+
+
+# ---------------------------------------------------------------------------
+# the fault model itself (no model, no devices)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_deterministic_and_consume_once():
+    a = FaultPlan.seeded_kill(seed=7, num_replicas=4)
+    b = FaultPlan.seeded_kill(seed=7, num_replicas=4)
+    assert a.planned() == b.planned()            # same seed, same plan
+    (act,) = a.planned()
+    assert act.kind == "kill" and 2 <= act.dispatch <= 10
+    plan = FaultPlan([FaultAction(0, 3, "delay", delay_s=0.0)])
+    plan.apply(0, 0)                             # no action scheduled
+    plan.apply(0, 3)                             # fires
+    assert [f.dispatch for f in plan.fired()] == [3]
+    plan.apply(0, 3)                             # consumed: fires once
+    assert len(plan.fired()) == 1
+    with pytest.raises(ValueError):
+        FaultPlan([FaultAction(0, 0, "explode")])
+
+
+def test_retry_policy_backoff_deterministic_and_bounded():
+    pol = RetryPolicy(max_attempts=5, backoff_base_s=0.01,
+                      backoff_factor=2.0, backoff_max_s=0.05, jitter=0.25)
+    assert pol.delay_s(0, rid=1) == 0.0
+    for attempt in range(1, 6):
+        d1 = pol.delay_s(attempt, rid=42)
+        d2 = pol.delay_s(attempt, rid=42)
+        assert d1 == d2                          # deterministic jitter
+        assert 0.0 < d1 <= 0.05 * 1.25           # bounded by max * jitter
+    assert pol.delay_s(1, rid=1) != pol.delay_s(1, rid=2)  # per-rid draw
+
+
+# ---------------------------------------------------------------------------
+# deterministic failover: kill a replica mid-generation, lose nothing
+# ---------------------------------------------------------------------------
+
+
+def _run_chaos(lm, plan, *, temperature=0.0, retry=None, n=6):
+    cfg, model, params = lm
+    protos = _workload(cfg, n=n)
+    subs = [Request(prompt=np.asarray(p).copy(), max_new_tokens=g)
+            for p, g in protos]
+    cluster = ServeCluster.for_replicas(
+        model, params, _ecfg(temperature=temperature), num_replicas=2,
+        faults=plan, retry=retry,
+        health=HealthConfig(soft_deadline_s=60.0, hard_deadline_s=120.0,
+                            interval_s=0.01))
+    results = cluster.run(subs)
+    return cluster, protos, subs, results
+
+
+def test_failover_kill_matches_sequential_greedy(lm):
+    """Kill one of two replicas at its 2nd dispatch: every request must
+    still complete with the exact fault-free greedy stream, exactly
+    once, with the death visible in health metrics."""
+    cfg, model, params = lm
+    plan = FaultPlan.kill_at(replica=0, dispatch=2)
+    cluster, protos, subs, results = _run_chaos(lm, plan)
+    assert plan.fired(), "the kill never fired — nothing was tested"
+    assert len(results) == len(subs)
+    assert all(r.fault is None for r in results.values())
+    for (p, g), sub in zip(protos, subs):
+        ref = _sequential_greedy(model, params, np.asarray(p), g)
+        assert results[sub.rid].tokens == ref
+    health = cluster.metrics()["health"]
+    assert health[0]["state"] == ReplicaState.DEAD.value
+    assert "ReplicaKilled" in health[0]["reason"]
+    # exactly-once terminals and an explicit retry trail
+    book = cluster.telemetry.requests
+    assert book.double_terminals.value == 0
+    assert cluster.metrics()["failover"]["failovers"] >= 1
+    retried = [t for t in book.traces() if t.retries > 0]
+    assert retried, "a mid-generation kill must re-dispatch something"
+    # re-dispatch stamps a retry event, never a second route/admit:
+    # TTFT stays derived from the original admission
+    for t in retried:
+        assert t.terminal == "complete"
+    assert sum(v == 0 for v in cluster.loads().values()) == 2
+
+
+def test_failover_kill_matches_sequential_sampled(lm):
+    """Same kill, seeded temperature sampling: position-stable
+    ``fold_in(rid, position)`` keys make the re-decode reproduce the
+    identical sampled stream on the surviving replica."""
+    cfg, model, params = lm
+    plan = FaultPlan.kill_at(replica=0, dispatch=2)
+    cluster, protos, subs, results = _run_chaos(lm, plan, temperature=0.8,
+                                                n=4)
+    assert plan.fired()
+    assert all(r.fault is None for r in results.values())
+    for (p, g), sub in zip(protos, subs):
+        ref = _sequential_sample(model, params, np.asarray(p), g,
+                                 rid=sub.rid, temperature=0.8)
+        assert results[sub.rid].tokens == ref
+
+
+def test_poison_quarantine(lm):
+    """With max_attempts=1, a request whose replica dies under it is
+    quarantined with a ``poison`` fault instead of re-dispatched; the
+    rest of the workload completes normally."""
+    cfg, model, params = lm
+    plan = FaultPlan.kill_at(replica=0, dispatch=1)
+    cluster, protos, subs, results = _run_chaos(
+        lm, plan, retry=RetryPolicy(max_attempts=1), n=6)
+    assert plan.fired()
+    assert len(results) == len(subs)             # every rid terminates
+    poisoned = {rid for rid, r in results.items() if r.fault == "poison"}
+    assert poisoned, "the killed replica had work in flight"
+    for (p, g), sub in zip(protos, subs):
+        if sub.rid in poisoned:
+            continue
+        ref = _sequential_greedy(model, params, np.asarray(p), g)
+        assert results[sub.rid].tokens == ref
+    assert cluster.telemetry.requests.double_terminals.value == 0
+
+
+def test_hang_failover_and_orphan_guard(lm):
+    """A replica that hangs (injected, releasable) blows the hard
+    heartbeat deadline, is declared DEAD, and its requests restart from
+    dispatcher snapshots on the survivor — then the hung worker is
+    released and must drop everything (orphan guard) instead of
+    double-serving."""
+    cfg, model, params = lm
+    plan = FaultPlan([FaultAction(0, 1, "hang")], hang_timeout_s=120.0)
+    protos = _workload(cfg, n=4)
+    subs = [Request(prompt=np.asarray(p).copy(), max_new_tokens=g)
+            for p, g in protos]
+    cluster = ServeCluster.for_replicas(
+        model, params, _ecfg(), num_replicas=2, faults=plan,
+        health=HealthConfig(soft_deadline_s=0.2, hard_deadline_s=0.6,
+                            interval_s=0.02))
+    cluster.warmup()     # sub-second hard deadline: compiles must be done
+    try:
+        results = cluster.run(subs)
+    finally:
+        plan.release_hangs()
+    assert plan.fired()
+    assert len(results) == len(subs)
+    assert all(r.fault is None for r in results.values())
+    for (p, g), sub in zip(protos, subs):
+        ref = _sequential_greedy(model, params, np.asarray(p), g)
+        assert results[sub.rid].tokens == ref
+    health = cluster.metrics()["health"]
+    assert health[0]["state"] == ReplicaState.DEAD.value
+    assert health[0]["reason"] == "hung"
+    assert cluster.telemetry.requests.double_terminals.value == 0
+
+
+def test_suspect_recovers_to_live(lm):
+    """A stalled-but-alive replica walks LIVE -> SUSPECT while its beat
+    is stale and back to LIVE on the next beat — no failover fires."""
+    cfg, model, params = lm
+    plan = FaultPlan([FaultAction(0, 1, "hang")], hang_timeout_s=120.0)
+    req = Request(prompt=np.arange(8) % cfg.vocab_size, max_new_tokens=6)
+    ref = _sequential_greedy(model, params, req.prompt.copy(), 6)
+    cluster = ServeCluster.for_replicas(
+        model, params, _ecfg(), num_replicas=1, faults=plan,
+        health=HealthConfig(soft_deadline_s=0.1, hard_deadline_s=1e6,
+                            interval_s=0.02))
+    done = {}
+    t = threading.Thread(target=lambda: done.update(cluster.run([req])))
+    t.start()
+    try:
+        deadline = time.monotonic() + 60.0
+        seen_suspect = False
+        while time.monotonic() < deadline and not seen_suspect:
+            st = cluster.metrics()["health"][0]["state"]
+            seen_suspect = st == ReplicaState.SUSPECT.value
+            time.sleep(0.01)
+        assert seen_suspect
+    finally:
+        plan.release_hangs()
+        t.join(timeout=60.0)
+    assert not t.is_alive()
+    assert done[req.rid].tokens == ref           # served by the SAME replica
+    assert cluster.metrics()["failover"]["failovers"] == 0
+    assert cluster.metrics()["health"][0]["reason"] == "drained"
+
+
+def test_bounded_join_forced_drain(lm):
+    """Regression: ``join`` used to wait forever on a wedged replica.
+    With huge health deadlines (the monitor will never notice) and a
+    join timeout, join must return — force-failing the wedged replica
+    and failing its work over to a respawned survivor."""
+    cfg, model, params = lm
+    plan = FaultPlan([FaultAction(0, 1, "hang")], hang_timeout_s=120.0)
+    protos = _workload(cfg, n=4)
+    subs = [Request(prompt=np.asarray(p).copy(), max_new_tokens=g)
+            for p, g in protos]
+    cluster = ServeCluster.for_replicas(
+        model, params, _ecfg(), num_replicas=2, faults=plan,
+        health=HealthConfig(soft_deadline_s=1e6, hard_deadline_s=1e6,
+                            interval_s=0.02),
+        join_timeout_s=2.0)
+    cluster.warmup()     # survivor must drain well inside the join budget
+    try:
+        cluster.start()
+        for s in subs:
+            cluster.submit(s)
+        cluster.close()
+        t0 = time.monotonic()
+        cluster.join()                           # bounded by join_timeout_s
+        assert time.monotonic() - t0 < 90.0
+    finally:
+        plan.release_hangs()
+    results = cluster.results()
+    assert len(results) == len(subs)
+    assert all(r.fault is None for r in results.values())
+    for (p, g), sub in zip(protos, subs):
+        ref = _sequential_greedy(model, params, np.asarray(p), g)
+        assert results[sub.rid].tokens == ref
+    m = cluster.metrics()
+    assert m["failover"]["forced_drains"] >= 1
+    assert m["health"][0]["reason"] == "hung"
+
+
+def test_drain_stops_new_routing(lm):
+    """Graceful degradation: a drained replica takes no new work, its
+    worker retires cleanly (reason ``drained``), and the survivor
+    serves everything."""
+    cfg, model, params = lm
+    protos = _workload(cfg, n=4)
+    subs = [Request(prompt=np.asarray(p).copy(), max_new_tokens=g)
+            for p, g in protos]
+    cluster = ServeCluster.for_replicas(model, params, _ecfg(),
+                                        num_replicas=2)
+    with cluster:
+        cluster.drain(0)
+        placed = {cluster.submit(s) for s in subs}
+    assert placed == {1}                         # nothing routed to 0
+    results = cluster.results()
+    assert len(results) == len(subs)
+    health = cluster.metrics()["health"]
+    assert health[0]["reason"] == "drained"
+    for (p, g), sub in zip(protos, subs):
+        ref = _sequential_greedy(model, params, np.asarray(p), g)
+        assert results[sub.rid].tokens == ref
+
+
+def test_shed_overload_and_no_live_replicas(lm):
+    """Load shedding (opt-in) fails fast instead of blocking; a cluster
+    with every replica drained refuses admission outright."""
+    cfg, model, params = lm
+    cluster = ServeCluster.for_replicas(
+        model, params, _ecfg(), num_replicas=1, capacity_tokens=20,
+        shed_overload=True)
+    rng = np.random.default_rng(5)
+    mk = lambda: Request(prompt=rng.integers(0, cfg.vocab_size, (8,)),
+                         max_new_tokens=4)       # weight 12
+    cluster.submit(mk())                         # workers never started
+    with pytest.raises(Overloaded):
+        cluster.submit(mk())
+    cluster.drain(0)
+    with pytest.raises(NoLiveReplicas):
+        cluster.submit(mk())
+    cluster.close()                              # releases the queued one
+    assert sum(cluster.loads().values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# deadlines at the engine dispatch boundary
+# ---------------------------------------------------------------------------
+
+
+def test_engine_e2e_deadline_faults_with_partial_output(lm):
+    cfg, model, params = lm
+    eng = Engine(model, params, _ecfg())
+    req = Request(prompt=np.arange(8) % cfg.vocab_size, max_new_tokens=12,
+                  deadline_s=1e6)
+    eng.submit(req)
+    results = {}
+    for _ in range(3):                           # admit + some decode
+        for r in eng.step():
+            results[r.rid] = r
+    assert not results
+    req.deadline_at = time.monotonic() - 1.0     # force expiry, no sleeps
+    while eng.has_work:
+        for r in eng.step():
+            results[r.rid] = r
+    res = results[req.rid]
+    assert res.fault == "deadline"
+    assert len(res.tokens) < 12                  # partial output kept
+    assert eng.metrics_snapshot()["counters"]["faulted"] == 1
+    assert eng.kv.allocator.num_free == 64       # everything released
+    tr = eng.telemetry.requests.get(req.rid)
+    assert tr.terminal == "fault"
+
+
+def test_engine_queue_deadline_faults_waiting_request(lm):
+    cfg, model, params = lm
+    eng = Engine(model, params, _ecfg(max_batch=1, admission_lookahead=0))
+    first = Request(prompt=np.arange(8) % cfg.vocab_size, max_new_tokens=8)
+    starved = Request(prompt=np.arange(6) % cfg.vocab_size,
+                      max_new_tokens=4, queue_deadline_s=1e6)
+    eng.submit(first)
+    eng.submit(starved)
+    eng.step()                                   # admits only `first`
+    starved.queue_deadline_at = time.monotonic() - 1.0
+    results = {}
+    while eng.has_work:
+        for r in eng.step():
+            results[r.rid] = r
+    assert results[starved.rid].fault == "queue_deadline"
+    assert results[starved.rid].tokens == []
+    assert results[first.rid].fault is None
+    assert len(results[first.rid].tokens) == 8
+
+
+def test_engine_reclaim_requests_stitches_partial_progress(lm):
+    """Post-mortem salvage: stop an engine mid-generation, reclaim its
+    requests, serve them on a FRESH engine — stitched output must equal
+    fault-free sequential decode (recompute fold preserves absolute
+    positions)."""
+    cfg, model, params = lm
+    protos = _workload(cfg, n=4, seed=11)
+    reqs = [Request(prompt=np.asarray(p).copy(), max_new_tokens=g)
+            for p, g in protos]
+    refs = {r.rid: _sequential_greedy(model, params, np.asarray(p), g)
+            for (p, g), r in zip(protos, reqs)}
+    eng1 = Engine(model, params, _ecfg())
+    for r in reqs:
+        eng1.submit(r)
+    results = {}
+    for _ in range(4):                           # partial progress
+        for r in eng1.step():
+            results[r.rid] = r
+    salvaged, done = eng1.reclaim_requests()
+    assert not eng1.has_work                     # emptied
+    assert eng1.kv.allocator.num_free == 64
+    for r in done:
+        results[r.rid] = r
+    eng2 = Engine(model, params, _ecfg(), replica_id=1)
+    for rid, r in eng2.run(salvaged).items():
+        results[rid] = r
+    assert set(results) == {r.rid for r in reqs}
+    for rid, ref in refs.items():
+        assert results[rid].tokens == ref
